@@ -1,0 +1,91 @@
+"""Paper Fig. 5: GreedyAda vs standalone / random / slowest allocation.
+
+Paper claims: GreedyAda up to 1.5x faster than random and up to 2.2x faster
+than slowest-first, across datasets and device counts.
+
+Part A runs the *real platform* (small model) with the virtual clock.
+Part B sweeps device counts with measured-time-driven scheduling only
+(pure allocation comparison at the paper's scale: 20 clients/round).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import repro as easyfl
+from benchmarks.common import emit
+from repro.sched.greedyada import (
+    GreedyAda, random_allocation, slowest_allocation,
+)
+
+
+def _platform_round_times(alloc: str, rounds=8, devices=4) -> float:
+    easyfl.reset()
+    easyfl.init({
+        "task_id": f"fig5_{alloc}",
+        "model": "linear", "dataset": "synthetic",
+        "data": {"num_clients": 30, "batch_size": 32, "unbalanced": True,
+                 "unbalanced_sigma": 1.4, "partition": "iid"},
+        "server": {"rounds": rounds, "clients_per_round": 20,
+                   "test_every": 0},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "system_heterogeneity": {"enabled": True},
+        # momentum=1.0 is the paper's own recommendation when the default
+        # client time is uncertain (§VI): stale default estimates otherwise
+        # make LPT pack all profiled clients onto one device
+        "resources": {"num_devices": devices, "allocation": alloc,
+                      "momentum": 1.0},
+    })
+    res = easyfl.run()
+    easyfl.reset()
+    # skip the first two rounds: jit warmup + profile warm-up
+    return float(np.mean([h["round_time"] for h in res["history"][2:]]))
+
+
+def _scheduler_sweep(M: int, n_clients=20, seed=0):
+    """Synthetic heterogeneous times (AI-Benchmark-style spread x
+    lognormal data imbalance), makespans of the three allocators."""
+    rng = np.random.RandomState(seed)
+    ratios = np.array([1.0, 1.53, 2.42, 3.1, 4.4])
+    base = rng.lognormal(0, 0.8, n_clients)
+    times = {f"c{i}": float(base[i] * rng.choice(ratios))
+             for i in range(n_clients)}
+    ids = list(times)
+    g = GreedyAda(M)
+    g.update(times)
+
+    def ms(groups):
+        return max(sum(times[c] for c in gr) for gr in groups if gr)
+
+    return (ms(g.allocate(ids)),
+            float(np.mean([ms(random_allocation(ids, M, s))
+                           for s in range(10)])),
+            ms(slowest_allocation(ids, M, times)))
+
+
+def main():
+    rows = []
+    # Part A: end-to-end platform comparison (paper Fig. 5 protocol)
+    for alloc in ("greedy_ada", "random", "slowest"):
+        rows.append((f"fig5_platform_{alloc}_round_s",
+                     _platform_round_times(alloc),
+                     "virtual-clock round time, 20 clients, 4 devices"))
+    g = rows[-3][1]
+    r = rows[-2][1]
+    s = rows[-1][1]
+    rows.append(("fig5_platform_speedup_vs_random", r / g,
+                 "paper: up to 1.5x (ms-scale clients on 1 CPU are at the "
+                 "wall-clock noise floor; Part B isolates the scheduler)"))
+    rows.append(("fig5_platform_speedup_vs_slowest", s / g,
+                 "paper: up to 2.2x"))
+
+    # Part B: scheduler sweep over device counts
+    for M in (2, 4, 8):
+        gm, rm, sm = _scheduler_sweep(M)
+        rows.append((f"fig5_sched_M{M}_speedup_vs_random", rm / gm,
+                     f"slowest-first {sm/gm:.2f}x"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper Fig. 8: server->client distribution latency when scaling clients.
+
+Measured over the real socket transport (gRPC stand-in) with parallel
+fan-out: latency grows ~linearly with #clients but stays small relative to
+training time.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.comm.transport import RPCServer, SocketTransport, parallel_requests
+from repro.models.registry import get_model
+
+import jax
+
+
+def main():
+    model = get_model("femnist_cnn")     # 6.6M params: realistic payload
+    params = jax.device_get(model.init(jax.random.PRNGKey(0)))
+    payload = {"params": params, "round_id": 0}
+
+    rows = []
+    lat = {}
+    for n in (2, 4, 8, 16):
+        servers = [RPCServer(lambda m, p: {"ok": True}).start()
+                   for _ in range(n)]
+        trs = [SocketTransport(s.address) for s in servers]
+        parallel_requests(trs, "train", [payload] * n)   # warm up
+        t0 = time.perf_counter()
+        parallel_requests(trs, "train", [payload] * n)
+        lat[n] = time.perf_counter() - t0
+        rows.append((f"fig8_distribution_latency_n{n}", lat[n],
+                     f"{len(trs)} clients, 6.6M-param payload"))
+        for t in trs:
+            t.close()
+        for s in servers:
+            s.stop()
+    growth = lat[16] / lat[2]
+    rows.append(("fig8_latency_growth_2_to_16", growth,
+                 "paper: ~linear growth, low vs training time"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Roofline table from the multi-pod dry-run artifacts (§Roofline source).
+
+Reads artifacts/dryrun/*.json and prints, per (arch x shape x mesh x step):
+compute/memory/collective seconds, dominant term, and the useful-compute
+ratio (MODEL_FLOPS / compiled FLOPs).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(ROOT, "artifacts", "dryrun_final")
+
+
+def load_records(pattern: str = "*.json"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("skipped"):
+            r["_file"] = os.path.basename(path)
+            recs.append(r)
+    return recs
+
+
+def main():
+    rows = []
+    recs = load_records()
+    if not recs:
+        rows.append(("roofline_records", 0,
+                     "run scripts/run_dryruns.sh first"))
+        emit(rows)
+        return rows
+    for r in recs:
+        rl = r["roofline"]
+        tag = f"{r['arch']}|{r['shape']}|{r['mesh']}|{r['step']}|{r['preset']}"
+        rows.append((f"roofline[{tag}]", rl["bound_s"] if "bound_s" in rl
+                     else max(rl["compute_s"], rl["memory_s"],
+                              rl["collective_s"]),
+                     f"dom={rl['dominant']} c={rl['compute_s']:.3g}s "
+                     f"m={rl['memory_s']:.3g}s x={rl['collective_s']:.3g}s "
+                     f"useful={rl['useful_compute_ratio']:.2f}"))
+    rows.append(("roofline_records", len(recs), "dry-run artifacts found"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

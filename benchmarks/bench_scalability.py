@@ -1,0 +1,61 @@
+"""Paper Fig. 7: distributed-training scalability.
+
+(a) round time falls with device count (1.84x for 8->16 in the paper,
+    sub-linear by 64);
+(b) round time grows much slower than data amount (20x data -> <4x time).
+
+Reproduced with the virtual clock: 100 selected clients per round, per-client
+time proportional to its sample count (measured constant folded out), the
+round time = GreedyAda makespan — the paper's quantity at simulation scale.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.config import DataConfig
+from repro.data import build_federated_data
+from repro.sched.greedyada import GreedyAda
+
+
+def _round_time(num_devices: int, data_amount: float, seed=0) -> float:
+    fed = build_federated_data(DataConfig(
+        dataset="femnist", num_clients=200, partition="iid",
+        data_amount=data_amount, seed=seed))
+    rng = np.random.RandomState(seed)
+    ids = rng.choice(fed.client_ids, 100, replace=False)
+    # per-client virtual time ~ samples / throughput (+ fixed overhead)
+    times = {cid: 0.05 + len(fed.clients[cid]) / 2000.0 for cid in ids}
+    sched = GreedyAda(num_devices)
+    sched.update(times)
+    groups = sched.allocate(list(ids))
+    return max(sum(times[c] for c in g) for g in groups if g)
+
+
+def main():
+    rows = []
+    base8 = _round_time(8, 1.0)
+    for m in (8, 16, 24, 32, 64):
+        t = _round_time(m, 1.0)
+        rows.append((f"fig7a_round_time_M{m}", t,
+                     f"speedup_vs_8={base8 / t:.2f}x (optimal {m/8:.0f}x)"))
+    s16 = base8 / _round_time(16, 1.0)
+    s64 = base8 / _round_time(64, 1.0)
+    rows.append(("fig7a_speedup_8_to_16", s16, "paper: 1.84x (optimal 2x)"))
+    rows.append(("fig7a_speedup_8_to_64", s64, "paper: 4.96x (optimal 8x)"))
+
+    t5 = _round_time(32, 0.05)
+    for amt in (0.05, 0.1, 0.2, 0.4, 0.8, 1.0):
+        t = _round_time(32, amt)
+        rows.append((f"fig7b_round_time_amt{int(amt*100)}", t,
+                     f"time_ratio_vs_5pct={t / t5:.2f}x data_ratio="
+                     f"{amt/0.05:.0f}x"))
+    ratio = _round_time(32, 1.0) / t5
+    rows.append(("fig7b_time_growth_20x_data", ratio,
+                 f"paper: <4x ({'PASS' if ratio < 4 else 'CHECK'})"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing + CSV row collection."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]   # (name, value, derived/notes)
+
+
+def timeit(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-clock seconds per call."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: List[Row]) -> None:
+    for name, value, derived in rows:
+        print(f"{name},{value:.6g},{derived}")

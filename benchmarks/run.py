@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig5,tab4,...]
+
+Prints ``name,value,derived`` CSV rows (value units are in each name).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("loc", "benchmarks.bench_loc", "Table I + Table V: lines of code"),
+    ("overhead", "benchmarks.bench_overhead", "Table VI: abstraction overhead"),
+    ("greedyada", "benchmarks.bench_greedyada", "Fig. 5: GreedyAda speedup"),
+    ("heterogeneity", "benchmarks.bench_heterogeneity",
+     "Fig. 6/10/11: straggler variance"),
+    ("scalability", "benchmarks.bench_scalability", "Fig. 7: scalability"),
+    ("latency", "benchmarks.bench_latency", "Fig. 8: distribution latency"),
+    ("noniid", "benchmarks.bench_noniid", "Table IV: IID vs non-IID"),
+    ("fedreid", "benchmarks.bench_fedreid", "Fig. 9: FedReID case study"),
+    ("compression", "benchmarks.bench_compression",
+     "STC/int8 compression (Table V support)"),
+    ("roofline", "benchmarks.bench_roofline", "§Roofline table from dry-run"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench keys to run")
+    args = ap.parse_args()
+    only = {s.strip() for s in args.only.split(",") if s.strip()}
+
+    print("name,value,derived")
+    failures = 0
+    for key, module, desc in BENCHES:
+        if only and key not in only:
+            continue
+        print(f"# === {key}: {desc} ===")
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["main"])
+            mod.main()
+            print(f"# {key} done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            print(f"# {key} FAILED:")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Developing a new FL algorithm by replacing ONE training-flow stage
+(paper §V-B): a trimmed-mean robust-aggregation server + a FedProx client.
+
+Everything else — selection, distribution, communication, tracking,
+scheduling — is reused from the platform.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro as easyfl
+from repro.core import compression as comp
+from repro.core.server import Server
+from repro.core.strategies import FedProxClient
+
+
+class TrimmedMeanServer(Server):
+    """Aggregation-stage override: coordinate-wise trimmed mean (robust to
+    outlier clients) instead of sample-weighted FedAvg."""
+
+    TRIM = 0.2
+
+    def aggregation(self, results):
+        updates = [comp.decompress(r["update"]) for r in results]
+        k = max(1, int(len(updates) * self.TRIM))
+
+        def trimmed(*leaves):
+            stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+            s = jnp.sort(stacked, axis=0)
+            return s[k:-k].mean(axis=0) if len(leaves) > 2 * k else s.mean(0)
+
+        delta = jax.tree_util.tree_map(trimmed, *updates)
+        self.params = jax.tree_util.tree_map(
+            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
+            self.params, delta)
+
+
+def main():
+    easyfl.init({
+        "model": "linear", "dataset": "synthetic",
+        "data": {"num_clients": 20, "partition": "dir", "batch_size": 32},
+        "server": {"rounds": 5, "clients_per_round": 8},
+        "client": {"local_epochs": 2, "lr": 0.1, "proximal_mu": 0.05},
+    })
+    easyfl.register_server(TrimmedMeanServer)
+    easyfl.register_client(FedProxClient)
+    result = easyfl.run()
+    accs = [round(h["accuracy"], 3) for h in result["history"]]
+    print("accuracy per round:", accs)
+    assert accs[-1] > accs[0]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Cross-pod federated training of an assigned LLM architecture — the
+paper's production phase on the TPU mesh (DESIGN.md §2), runnable on CPU
+with a reduced config.
+
+Each "pod" (FL silo) takes E local steps on its own data shard; the round
+ends with one FedAvg collective across pods, optionally STC-compressed with
+error feedback.  This is exactly the program the multi-pod dry-run lowers
+at (2,16,16) scale.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.federated import (
+    FedRoundConfig, init_fed_state, make_fed_round_step,
+)
+from repro.launch.train import synthetic_lm_batches
+from repro.models.model import Model, init_train_state
+from repro.optim import sgd
+
+
+def main(rounds=8, pods=2, local_steps=4, batch=2, seq=128):
+    cfg = get_arch("glm4-9b", reduced=True)
+    model = Model(cfg)
+    opt = sgd(3e-2, momentum=0.9)
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    fed_cfg = FedRoundConfig(local_steps=local_steps, compression="stc",
+                             stc_sparsity=0.1)
+    fed = init_fed_state(state, pods, fed_cfg)
+    fed_round = jax.jit(make_fed_round_step(model, opt, fed_cfg, pods))
+
+    # each pod has its own (non-IID) data stream
+    streams = [synthetic_lm_batches(cfg.vocab, batch, seq, seed=pod)
+               for pod in range(pods)]
+    for r in range(rounds):
+        tok = jnp.stack([
+            jnp.stack([next(streams[p])["tokens"]
+                       for _ in range(local_steps)])
+            for p in range(pods)])                      # (P, E, B, S)
+        fed, metrics = fed_round(fed, {"tokens": tok})
+        print(f"round {r}: loss={float(metrics['loss']):.4f}")
+    # pods remain in sync after every round
+    for leaf in jax.tree_util.tree_leaves(fed.train.params):
+        np.testing.assert_allclose(np.asarray(leaf[0], np.float32),
+                                   np.asarray(leaf[-1], np.float32),
+                                   rtol=1e-6)
+    print("pods in sync; federated LLM round OK")
+
+
+if __name__ == "__main__":
+    main()

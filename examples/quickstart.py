@@ -1,0 +1,6 @@
+"""Paper Listing 1, Example 1 — a complete vanilla FL application in 3 LOC."""
+import repro as easyfl
+
+configs = {"model": "linear", "dataset": "synthetic", "server": {"rounds": 5}}
+easyfl.init(configs)
+easyfl.run(callback=lambda s: print("final:", s["final"]))

@@ -1,0 +1,17 @@
+"""Batched autoregressive serving of an assigned architecture (reduced) —
+the decode_32k / long_500k program at example scale, including the
+sliding-window long-context mode."""
+from repro.launch import serve
+
+
+def main():
+    print("== full-cache decode (decode_32k path) ==")
+    serve.main(["--arch", "deepseek-v2-lite-16b", "--batch", "2",
+                "--prompt-len", "16", "--gen", "16", "--cache-len", "64"])
+    print("== sliding-window decode (long_500k path) ==")
+    serve.main(["--arch", "glm4-9b", "--batch", "2", "--prompt-len", "16",
+                "--gen", "16", "--cache-len", "64", "--ring"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from artifacts/dryrun.
+
+    PYTHONPATH=src python scripts/make_tables.py [--mesh single] [--step auto]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+ARCH_ORDER = ["rwkv6-1.6b", "internlm2-20b", "paligemma-3b", "whisper-small",
+              "glm4-9b", "phi3-medium-14b", "nemotron-4-340b",
+              "qwen3-moe-30b-a3b", "recurrentgemma-9b",
+              "deepseek-v2-lite-16b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh=None, step=None, preset=None, tag=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ROOT, "artifacts", "dryrun_final",
+                                           "*.json"))):
+        r = json.load(open(p))
+        r["_file"] = os.path.basename(p)
+        if r.get("skipped"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        if step and r["step"] != step:
+            continue
+        if preset and r.get("preset") != preset:
+            continue
+        if tag is not None:
+            # base files have 4 "__" separators; tagged variants have 5
+            if tag == "":
+                if r["_file"].count("__") != 4:
+                    continue
+            elif f"__{tag}." not in r["_file"]:
+                continue
+        recs.append(r)
+    return recs
+
+
+def fmt(v):
+    if v == 0:
+        return "0"
+    if v < 1e-3 or v >= 1e4:
+        return f"{v:.2e}"
+    return f"{v:.3f}" if v < 10 else f"{v:.1f}"
+
+
+def roofline_table(mesh="single"):
+    recs = {(r["arch"], r["shape"]): r for r in load(mesh=mesh, tag="")
+            if r["step"] in ("train", "prefill", "serve")}
+    print(f"\n### Roofline — {mesh}-pod mesh (per-chip terms, seconds)\n")
+    print("| arch | shape | step | compute_s | memory_s | collective_s | "
+          "dominant | MODEL_FLOPS | useful ratio | bound_s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | — | — | — | — | skipped | — | — | — |")
+                continue
+            rl = r["roofline"]
+            bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+            print(f"| {a} | {s} | {r['step']} | {fmt(rl['compute_s'])} | "
+                  f"{fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} | "
+                  f"**{rl['dominant']}** | {rl['model_flops']:.2e} | "
+                  f"{rl['useful_compute_ratio']:.2f} | {fmt(bound)} |")
+
+
+def dryrun_table(mesh="single"):
+    recs = {(r["arch"], r["shape"]): r for r in load(mesh=mesh, tag="")
+            if r["step"] in ("train", "prefill", "serve")}
+    print(f"\n### Dry-run — {mesh}-pod mesh\n")
+    print("| arch | shape | compile_s | HLO flops/chip | HBM GB/chip | "
+          "coll GB/chip | AG | AR | RS | A2A | CP |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get((a, s))
+            if r is None:
+                print(f"| {a} | {s} | — (skipped) | | | | | | | | |")
+                continue
+            rl = r["roofline"]
+            c = r["collectives"]["count_by_op"]
+            print(f"| {a} | {s} | {r['compile_s']:.1f} | "
+                  f"{rl['flops']:.2e} | {rl['hbm_bytes']/1e9:.1f} | "
+                  f"{rl['collective_bytes']/1e9:.2f} | "
+                  f"{int(c.get('all-gather',0))} | "
+                  f"{int(c.get('all-reduce',0))} | "
+                  f"{int(c.get('reduce-scatter',0))} | "
+                  f"{int(c.get('all-to-all',0))} | "
+                  f"{int(c.get('collective-permute',0))} |")
+
+
+def fed_table():
+    recs = [r for r in load(step="fed")]
+    if not recs:
+        return
+    print("\n### Federated round (paper technique) — multi-pod mesh\n")
+    print("| arch | variant | compute_s | memory_s | collective_s | "
+          "DCN MB/chip | DCN ms | dominant | useful |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: r["_file"]):
+        rl = r["roofline"]
+        parts = r["_file"].rsplit(".", 1)[0].split("__")
+        variant = parts[5] if len(parts) > 5 else \
+            r.get("fed_compression", "E4-base")
+        print(f"| {r['arch']} | {variant} | {fmt(rl['compute_s'])} | "
+              f"{fmt(rl['memory_s'])} | {fmt(rl['collective_s'])} | "
+              f"{rl.get('dcn_bytes', 0)/1e6:.1f} | "
+              f"{rl.get('dcn_s', 0)*1e3:.1f} | "
+              f"{rl['dominant']} | {rl['useful_compute_ratio']:.2f} |")
+
+
+def opt_table():
+    recs = [r for r in load(tag="opt")]
+    if not recs:
+        return
+    print("\n### Hillclimbed (optimized) lowerings vs baselines\n")
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+          "bound_s | useful |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: r["_file"]):
+        rl = r["roofline"]
+        bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+              f"{fmt(rl['compute_s'])} | {fmt(rl['memory_s'])} | "
+              f"{fmt(rl['collective_s'])} | {fmt(bound)} | "
+              f"{rl['useful_compute_ratio']:.2f} |")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", default="all",
+                    choices=["all", "roofline", "dryrun", "fed"])
+    args = ap.parse_args()
+    if args.which in ("all", "roofline"):
+        roofline_table("single")
+        roofline_table("multi")
+    if args.which in ("all", "dryrun"):
+        dryrun_table("single")
+        dryrun_table("multi")
+    if args.which in ("all", "fed"):
+        fed_table()
+    if args.which == "all":
+        opt_table()

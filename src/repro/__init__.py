@@ -1,0 +1,17 @@
+"""repro — EasyFL (Zhuang et al., 2021) reproduced as a JAX/TPU framework.
+
+Low-code entry points (paper Table II):
+
+    import repro as easyfl
+    easyfl.init({"model": "cifar_resnet18"})   # optional configs
+    easyfl.run()                               # start training
+
+See DESIGN.md for the architecture and EXPERIMENTS.md for the validation of
+the paper's claims + the multi-pod dry-run / roofline analysis.
+"""
+from repro.core.api import (  # noqa: F401
+    init, register_client, register_dataset, register_model, register_server,
+    reset, run, start_client, start_server, tracker,
+)
+
+__version__ = "1.0.0"

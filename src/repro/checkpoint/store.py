@@ -1,0 +1,51 @@
+"""Pytree checkpointing: msgpack files with atomic rename + step indexing."""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+from repro.comm import serialize
+
+
+def _path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.msgpack")
+
+
+def save_checkpoint(ckpt_dir: str, tree: Any, step: int,
+                    keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    data = serialize.dumps(tree)
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        f.write(data)
+    final = _path(ckpt_dir, step)
+    os.replace(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.msgpack$", fn))]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> Any:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    with open(_path(ckpt_dir, step), "rb") as f:
+        return serialize.loads(f.read())
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(
+        int(m.group(1)) for fn in os.listdir(ckpt_dir)
+        if (m := re.match(r"ckpt_(\d+)\.msgpack$", fn)))
+    for s in steps[:-keep] if keep else []:
+        os.remove(_path(ckpt_dir, s))

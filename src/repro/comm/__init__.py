@@ -1,0 +1,5 @@
+from repro.comm.serialize import dumps, loads, message_bytes  # noqa: F401
+from repro.comm.transport import (  # noqa: F401
+    InProcessTransport, RPCServer, SocketTransport, Transport,
+    parallel_requests,
+)

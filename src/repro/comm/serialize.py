@@ -1,0 +1,78 @@
+"""Pytree <-> bytes serialization (the paper's *Protocol* tier, Fig. 4a).
+
+The original uses Protocol Buffers over gRPC; here the wire format is
+msgpack with a compact ndarray encoding (dtype, shape, raw bytes) — the same
+role: a deterministic, language-agnostic message body for model parameters,
+gradients, and control messages.
+"""
+from __future__ import annotations
+
+import io
+from typing import Any
+
+import msgpack
+import numpy as np
+
+_NDARRAY = "__nd__"
+_TUPLE = "__tuple__"
+
+
+def _dtype_tag(dt: np.dtype) -> str:
+    # extension dtypes (bfloat16, float8_*) have unhelpful .str ("V2");
+    # their .name roundtrips through ml_dtypes
+    return dt.name if dt.str.lstrip("<>|=").startswith("V") else dt.str
+
+
+def _resolve_dtype(tag: str) -> np.dtype:
+    try:
+        return np.dtype(tag)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, tag))
+
+
+def _encode(obj):
+    if isinstance(obj, np.ndarray):
+        return {_NDARRAY: True, "d": _dtype_tag(obj.dtype),
+                "s": list(obj.shape), "b": obj.tobytes()}
+    if hasattr(obj, "dtype") and hasattr(obj, "shape"):  # jax array
+        arr = np.asarray(obj)
+        return _encode(arr)
+    if isinstance(obj, tuple):
+        return {_TUPLE: [ _encode(x) for x in obj ]}
+    if isinstance(obj, list):
+        return [_encode(x) for x in obj]
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if obj.get(_NDARRAY):
+            return np.frombuffer(
+                obj["b"], dtype=_resolve_dtype(obj["d"])
+            ).reshape(obj["s"]).copy()
+        if _TUPLE in obj:
+            return tuple(_decode(x) for x in obj[_TUPLE])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(x) for x in obj]
+    return obj
+
+
+def dumps(tree: Any) -> bytes:
+    return msgpack.packb(_encode(tree), use_bin_type=True)
+
+
+def loads(data: bytes) -> Any:
+    return _decode(msgpack.unpackb(data, raw=False, strict_map_key=False))
+
+
+def message_bytes(tree: Any) -> int:
+    """Size of a serialized message (communication-cost tracking)."""
+    return len(dumps(tree))

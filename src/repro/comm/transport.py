@@ -1,0 +1,182 @@
+"""Remote-communication tier (paper §VII, Fig. 4a).
+
+Three-tier server/client architecture: RPC <-> Protocol <-> Handler.
+Two interchangeable transports with identical semantics:
+
+* ``InProcessTransport``   — function-call loopback (standalone/distributed
+  training; zero-copy, but still round-trips through the Protocol serializer
+  so message sizes are tracked identically to production).
+* ``SocketTransport``      — length-prefixed messages over local TCP sockets
+  with a thread-pool server; the production stand-in for gRPC in this
+  container (the real deployment would swap in the gRPC service generated
+  from the same message schema — see ``repro.deploy.manifests``).
+
+The *training flow abstraction* (core/stages.py) decouples training from
+communication, so switching transports never touches algorithm code —
+``start_server``/``start_client`` just select a transport.
+"""
+from __future__ import annotations
+
+import queue
+import socket
+import socketserver
+import struct
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.comm import serialize
+
+Handler = Callable[[str, Any], Any]
+
+
+class Transport:
+    """Message interface: request(method, payload) -> response."""
+
+    def request(self, method: str, payload: Any) -> Any:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+@dataclass
+class TransportStats:
+    requests: int = 0
+    bytes_sent: int = 0
+    bytes_received: int = 0
+    total_latency: float = 0.0
+
+
+class InProcessTransport(Transport):
+    """Loopback transport; serializes both ways to emulate the wire."""
+
+    def __init__(self, handler: Handler, latency: float = 0.0):
+        self.handler = handler
+        self.latency = latency
+        self.stats = TransportStats()
+
+    def request(self, method: str, payload: Any) -> Any:
+        t0 = time.perf_counter()
+        wire = serialize.dumps({"method": method, "payload": payload})
+        self.stats.bytes_sent += len(wire)
+        if self.latency:
+            time.sleep(self.latency)
+        msg = serialize.loads(wire)
+        result = self.handler(msg["method"], msg["payload"])
+        back = serialize.dumps(result)
+        self.stats.bytes_received += len(back)
+        self.stats.requests += 1
+        self.stats.total_latency += time.perf_counter() - t0
+        return serialize.loads(back)
+
+
+# ---------------------------------------------------------------------------
+# Socket transport (gRPC stand-in)
+# ---------------------------------------------------------------------------
+
+
+def _send_msg(sock: socket.socket, data: bytes) -> None:
+    sock.sendall(struct.pack(">Q", len(data)) + data)
+
+
+def _recv_msg(sock: socket.socket) -> bytes:
+    header = _recv_exact(sock, 8)
+    (length,) = struct.unpack(">Q", header)
+    return _recv_exact(sock, length)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise ConnectionError("socket closed")
+        buf += chunk
+    return buf
+
+
+class RPCServer:
+    """Thread-pool RPC server (the paper's *RPC Server* tier)."""
+
+    def __init__(self, handler: Handler, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.handler = handler
+        outer = self
+
+        class _Handler(socketserver.BaseRequestHandler):
+            def handle(self):
+                try:
+                    while True:
+                        data = _recv_msg(self.request)
+                        msg = serialize.loads(data)
+                        result = outer.handler(msg["method"], msg["payload"])
+                        _send_msg(self.request, serialize.dumps(result))
+                except (ConnectionError, OSError):
+                    pass
+
+        class _Server(socketserver.ThreadingTCPServer):
+            allow_reuse_address = True
+            daemon_threads = True
+
+        self._server = _Server((host, port), _Handler)
+        self.address: Tuple[str, int] = self._server.server_address
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        daemon=True)
+
+    def start(self) -> "RPCServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+
+
+class SocketTransport(Transport):
+    """RPC client over TCP with msgpack protocol."""
+
+    def __init__(self, address: Tuple[str, int], latency: float = 0.0):
+        self.address = tuple(address)
+        self.latency = latency
+        self.stats = TransportStats()
+        self._sock = socket.create_connection(self.address)
+        self._lock = threading.Lock()
+
+    def request(self, method: str, payload: Any) -> Any:
+        t0 = time.perf_counter()
+        wire = serialize.dumps({"method": method, "payload": payload})
+        if self.latency:
+            time.sleep(self.latency)
+        with self._lock:
+            _send_msg(self._sock, wire)
+            back = _recv_msg(self._sock)
+        self.stats.requests += 1
+        self.stats.bytes_sent += len(wire)
+        self.stats.bytes_received += len(back)
+        self.stats.total_latency += time.perf_counter() - t0
+        return serialize.loads(back)
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+
+def parallel_requests(transports, method: str, payloads) -> list:
+    """Asynchronous fan-out (paper: 'requests are asynchronous ... clients
+    take a long time to execute').  Returns responses in input order."""
+    results = [None] * len(transports)
+
+    def run(i, tr, pl):
+        results[i] = tr.request(method, pl)
+
+    threads = [threading.Thread(target=run, args=(i, tr, pl))
+               for i, (tr, pl) in enumerate(zip(transports, payloads))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return results

@@ -1,0 +1,26 @@
+"""GLM-4-9B — dense decoder with GQA and RoPE.
+
+Hyperparameters from hf:THUDM/glm-4-9b: 40 layers, d_model 4096, 32 query
+heads with 2 KV heads, FFN 13696 (SwiGLU), vocab 151552.
+
+Adaptation note: GLM applies rotary embedding to half the head dim
+(partial rotary 0.5); we apply full-dim RoPE — identical FLOPs/memory,
+noted in DESIGN.md §2.
+"""
+from repro.core.config import ArchConfig
+
+ARCH = ArchConfig(
+    name="glm4-9b",
+    family="dense",
+    reference="hf:THUDM/glm-4-9b (GLM-4)",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab=151552,
+    act="swiglu",
+    norm="rmsnorm",
+    rope_theta=10_000.0,
+)

@@ -1,0 +1,62 @@
+"""Aggregation stage (paper Fig. 3, server side).
+
+FedAvg [McMahan et al., AISTATS'17]: sample-count-weighted average of client
+updates applied to the global model.  The heavy inner loop — a weighted sum
+over N client update vectors — has a Pallas TPU kernel
+(``repro.kernels.fedavg_agg``); ``use_kernel`` switches it in, the pure-jnp
+path is its oracle.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def fedavg_weights(num_samples: Sequence[int]) -> np.ndarray:
+    w = np.asarray(num_samples, dtype=np.float64)
+    return (w / w.sum()).astype(np.float32)
+
+
+def weighted_average(updates: List[PyTree], weights: np.ndarray,
+                     use_kernel: bool = False) -> PyTree:
+    """Weighted mean over a list of pytrees (equal structure)."""
+    weights = jnp.asarray(weights, jnp.float32)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        flats = [jax.flatten_util.ravel_pytree(u)[0] for u in updates]
+        unravel = jax.flatten_util.ravel_pytree(updates[0])[1]
+        stacked = jnp.stack(flats)               # (N, D)
+        return unravel(kops.fedavg_aggregate(stacked, weights))
+
+    def avg(*leaves):
+        acc = leaves[0].astype(jnp.float32) * weights[0]
+        for w, leaf in zip(weights[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * w
+        return acc
+
+    return jax.tree_util.tree_map(avg, *updates)
+
+
+def fedavg(global_params: PyTree, updates: List[PyTree],
+           num_samples: Sequence[int], use_kernel: bool = False,
+           server_lr: float = 1.0) -> PyTree:
+    """Apply the weighted-average *update* (delta) to the global params."""
+    delta = weighted_average(updates, fedavg_weights(num_samples), use_kernel)
+    return jax.tree_util.tree_map(
+        lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
+        global_params, delta)
+
+
+AGGREGATORS = {"fedavg": fedavg}
+
+
+def get_aggregator(name: str):
+    if name not in AGGREGATORS:
+        raise KeyError(f"unknown aggregator {name!r}")
+    return AGGREGATORS[name]

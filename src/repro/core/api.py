@@ -1,0 +1,162 @@
+"""EasyFL interface layer (paper §IV, Table II) — the low-code API.
+
+Three lines for a vanilla FL application (Listing 1, Example 1):
+
+    import repro as easyfl
+    easyfl.init({"model": "cifar_resnet18"})
+    easyfl.run()
+
+Categories:
+  initialization — ``init(configs)``
+  registration   — ``register_dataset`` / ``register_model`` /
+                   ``register_server`` / ``register_client``
+  execution      — ``run(callback)`` / ``start_server`` / ``start_client``
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.client import Client
+from repro.core.config import Config
+from repro.core.rounds import Trainer
+from repro.core.server import Server
+from repro.data.fed_data import FederatedDataset, build_federated_data
+from repro.data.fed_data import register_dataset as _register_dataset
+from repro.models.registry import (
+    DATASET_DEFAULT_MODEL, get_model, register_model as _register_model,
+)
+from repro.tracking import Tracker
+
+
+class _Context:
+    def __init__(self):
+        self.config: Optional[Config] = None
+        self.model = None
+        self.server_cls = Server
+        self.client_cls = Client
+        self.fed_data: Optional[FederatedDataset] = None
+        self.tracker: Optional[Tracker] = None
+        self.trainer: Optional[Trainer] = None
+        self._registered_train = None
+        self._registered_test = None
+
+    def reset(self):
+        self.__init__()
+
+
+_ctx = _Context()
+
+
+# ---------------------------------------------------------------------------
+# initialization
+# ---------------------------------------------------------------------------
+
+
+def init(configs: Optional[Dict[str, Any]] = None) -> Config:
+    """Initialize the platform: merge configs with defaults, set up the
+    simulation environment (data manager + simulation manager)."""
+    configs = dict(configs or {})
+    # low-code conveniences: allow flat {"model": ..., "dataset": ...}
+    if "dataset" in configs:
+        configs.setdefault("data", {})
+        configs["data"] = {**configs["data"], "dataset": configs.pop("dataset")}
+    if "model" not in configs:
+        ds = configs.get("data", {}).get("dataset", Config().data.dataset)
+        configs["model"] = DATASET_DEFAULT_MODEL.get(ds, "femnist_cnn")
+    cfg = Config.make(configs)
+    _ctx.config = cfg
+    _ctx.model = get_model(cfg.model)
+    if _ctx._registered_train is not None:
+        _ctx.fed_data = _ctx._registered_train
+    else:
+        _ctx.fed_data = build_federated_data(cfg.data)
+    _ctx.tracker = Tracker(cfg.tracking.backend, cfg.tracking.out_dir)
+    _ctx.trainer = None
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# registration
+# ---------------------------------------------------------------------------
+
+
+def register_dataset(train, test=None) -> None:
+    """Register an external (already federated) dataset."""
+    if isinstance(train, FederatedDataset):
+        _ctx._registered_train = train
+    else:
+        _register_dataset(getattr(train, "name", "registered"), train)
+    if _ctx.config is not None and isinstance(train, FederatedDataset):
+        _ctx.fed_data = train
+
+
+def register_model(model) -> None:
+    _register_model(model)
+    if _ctx.config is not None:
+        name = getattr(model, "name", None)
+        if name:
+            _ctx.model = get_model(name)
+
+
+def register_server(server_cls) -> None:
+    _ctx.server_cls = server_cls
+
+
+def register_client(client_cls) -> None:
+    _ctx.client_cls = client_cls
+
+
+# ---------------------------------------------------------------------------
+# execution
+# ---------------------------------------------------------------------------
+
+
+def run(callback: Optional[Callable] = None) -> Dict[str, Any]:
+    """Start training (standalone or distributed per config)."""
+    if _ctx.config is None:
+        init({})
+    cfg = _ctx.config
+    server = _ctx.server_cls(_ctx.model, cfg, _ctx.fed_data.test)
+    _ctx.trainer = Trainer(cfg, _ctx.model, _ctx.fed_data,
+                           tracker=_ctx.tracker, server=server,
+                           client_cls=_ctx.client_cls)
+    return _ctx.trainer.run(callback)
+
+
+def start_server(args: Optional[Dict[str, Any]] = None):
+    """Start the server service for remote training (paper Example 2)."""
+    from repro.core.remote import RemoteServer
+    if _ctx.config is None:
+        init({})
+    args = dict(args or {})
+    server = _ctx.server_cls(_ctx.model, _ctx.config, _ctx.fed_data.test)
+    rs = RemoteServer(server, _ctx.config, tracker=_ctx.tracker, **args)
+    rs.start()
+    return rs
+
+
+def start_client(args: Optional[Dict[str, Any]] = None):
+    """Start a client service for remote training."""
+    from repro.core.remote import RemoteClient
+    if _ctx.config is None:
+        init({})
+    args = dict(args or {})
+    cid = args.pop("client_id", "client_0000")
+    data = args.pop("data", None)
+    if data is None:
+        data = _ctx.fed_data.clients[cid]
+    client = _ctx.client_cls(cid, _ctx.model, data, _ctx.config.client,
+                             batch_size=_ctx.config.data.batch_size)
+    rc = RemoteClient(client, **args)
+    rc.start()
+    return rc
+
+
+def tracker() -> Tracker:
+    return _ctx.tracker
+
+
+def reset() -> None:
+    """Clear global state (tests)."""
+    _ctx.reset()

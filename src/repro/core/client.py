@@ -1,0 +1,107 @@
+"""FL client with the granular training-flow stages (paper Fig. 3, right).
+
+Stage pipeline per round:
+    download -> decompression -> train (E local epochs) -> compression
+    -> encryption -> upload
+
+Subclass and override any stage to implement a new algorithm (§V-B); the
+runtime and communication layers never change.  ``core/strategies`` holds
+the paper's worked examples (FedProx overrides ``train``; STC overrides the
+compression stages with error feedback).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.config import ClientConfig
+from repro.core.local_train import evaluate, local_train
+from repro.data.fed_data import ClientData
+from repro.models.small import FLModel
+from repro.optim import get_optimizer
+
+
+class Client:
+    def __init__(self, client_id: str, model: FLModel, data: ClientData,
+                 cfg: ClientConfig, batch_size: int = 64):
+        self.client_id = client_id
+        self.model = model
+        self.data = data
+        self.cfg = cfg
+        self.batch_size = batch_size
+        self.optimizer = get_optimizer(cfg.optimizer, cfg.lr, cfg.momentum,
+                                       cfg.weight_decay)
+        self._residual = None      # error-feedback state for compression
+
+    # ------------------------------------------------------------------
+    # stages
+    # ------------------------------------------------------------------
+    def download(self, payload: Dict[str, Any]) -> Dict[str, Any]:
+        return payload
+
+    def decompression(self, payload: Dict[str, Any]) -> Any:
+        return comp.decompress(payload["params"])
+
+    def train(self, params: Any, round_id: int) -> Dict[str, Any]:
+        global_params = params
+        t0 = time.perf_counter()
+        new_params, metrics = local_train(
+            self.model, params, self.data.x, self.data.y,
+            epochs=self.cfg.local_epochs, batch_size=self._batch_size(),
+            optimizer=self.optimizer, proximal_mu=self.cfg.proximal_mu,
+            max_grad_norm=self.cfg.max_grad_norm,
+            seed=round_id * 9973 + _stable_hash(self.client_id),
+            global_params=global_params)
+        train_time = time.perf_counter() - t0
+        update = jax.tree_util.tree_map(
+            lambda n, g: n.astype(jnp.float32) - g.astype(jnp.float32),
+            new_params, global_params)
+        return {"update": update, "num_samples": len(self.data),
+                "metrics": metrics, "train_time": train_time}
+
+    def test(self, params: Any) -> Dict[str, float]:
+        return evaluate(self.model, params, self.data.x, self.data.y)
+
+    def compression(self, result: Dict[str, Any]) -> Dict[str, Any]:
+        method = self.cfg.compression
+        if method in ("none", "", None):
+            return result
+        if self._residual is None:
+            self._residual = comp.zero_residual(result["update"])
+        compressed, self._residual = comp.compress_with_feedback(
+            result["update"], self._residual, method, self.cfg.stc_sparsity)
+        out = dict(result)
+        out["update"] = compressed
+        out["payload_bytes"] = comp.payload_bytes(compressed)
+        return out
+
+    def encryption(self, result: Dict[str, Any]) -> Dict[str, Any]:
+        return result  # hook for secure aggregation / HE plugins
+
+    def upload(self, result: Dict[str, Any]) -> Dict[str, Any]:
+        return result
+
+    # ------------------------------------------------------------------
+    def run_round(self, payload: Dict[str, Any], round_id: int) -> Dict[str, Any]:
+        msg = self.download(payload)
+        params = self.decompression(msg)
+        result = self.train(params, round_id)
+        result = self.compression(result)
+        result = self.encryption(result)
+        result["client_id"] = self.client_id
+        return self.upload(result)
+
+    def _batch_size(self) -> int:
+        return self.batch_size
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 % (2**31)
+    return h

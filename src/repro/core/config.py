@@ -1,0 +1,399 @@
+"""Configuration system.
+
+Two config families live here:
+
+* :class:`Config` — the EasyFL platform configuration consumed by
+  ``repro.init(configs)`` (paper §IV-B).  It is a nested dataclass tree that
+  can be constructed from plain dicts (the paper's low-code entry point:
+  ``easyfl.init({"model": "resnet18"})``) and merged with defaults.
+
+* :class:`ArchConfig` — architecture description for the model zoo
+  (``repro.models``).  One instance per assigned architecture lives in
+  ``repro.configs.<id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, fields
+from typing import Any, Mapping, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Generic dict <-> dataclass plumbing
+# ---------------------------------------------------------------------------
+
+
+def _is_config_dataclass(tp: Any) -> bool:
+    return dataclasses.is_dataclass(tp) and isinstance(tp, type)
+
+
+def from_dict(cls, data: Mapping[str, Any]):
+    """Build dataclass ``cls`` from a (possibly partial, nested) dict.
+
+    Unknown keys raise ``KeyError`` — silent typos in experiment configs are
+    a classic source of unreproducible results.
+    """
+    if data is None:
+        data = {}
+    valid = {f.name: f for f in fields(cls)}
+    unknown = set(data) - set(valid)
+    if unknown:
+        raise KeyError(
+            f"unknown config key(s) {sorted(unknown)} for {cls.__name__}; "
+            f"valid keys: {sorted(valid)}"
+        )
+    kwargs = {}
+    for name, f in valid.items():
+        if name not in data:
+            continue
+        value = data[name]
+        if _is_config_dataclass(f.type if isinstance(f.type, type) else None) and isinstance(value, Mapping):
+            value = from_dict(f.type, value)
+        elif isinstance(value, Mapping) and _maybe_dataclass_for(f) is not None:
+            value = from_dict(_maybe_dataclass_for(f), value)
+        kwargs[name] = value
+    return cls(**kwargs)
+
+
+def _maybe_dataclass_for(f: dataclasses.Field):
+    """Resolve the dataclass type for fields annotated Optional[SomeConfig]."""
+    tp = f.type
+    if isinstance(tp, str):
+        tp = _TYPE_REGISTRY.get(tp.replace("Optional[", "").replace("]", ""))
+    if tp is not None and _is_config_dataclass(tp):
+        return tp
+    return None
+
+
+def to_dict(cfg) -> dict:
+    return dataclasses.asdict(cfg)
+
+
+def merge(cfg, overrides: Mapping[str, Any]):
+    """Return a copy of dataclass ``cfg`` with nested ``overrides`` applied."""
+    if not overrides:
+        return cfg
+    updates = {}
+    valid = {f.name: f for f in fields(cfg)}
+    unknown = set(overrides) - set(valid)
+    if unknown:
+        raise KeyError(
+            f"unknown config key(s) {sorted(unknown)} for {type(cfg).__name__}; "
+            f"valid keys: {sorted(valid)}"
+        )
+    for name, value in overrides.items():
+        current = getattr(cfg, name)
+        if dataclasses.is_dataclass(current) and isinstance(value, Mapping):
+            updates[name] = merge(current, value)
+        elif isinstance(value, Mapping) and _maybe_dataclass_for(valid[name]) is not None:
+            updates[name] = from_dict(_maybe_dataclass_for(valid[name]), value)
+        else:
+            updates[name] = value
+    return dataclasses.replace(cfg, **updates)
+
+
+# ---------------------------------------------------------------------------
+# EasyFL platform configuration (paper §IV)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    """Dataset + statistical-heterogeneity simulation (paper §V-A)."""
+
+    dataset: str = "femnist"          # femnist | shakespeare | cifar10 | registered name
+    num_clients: int = 100            # used by flexible datasets (cifar-like)
+    partition: str = "iid"            # iid | dir | class | realistic
+    dir_alpha: float = 0.5            # Dirichlet concentration for partition="dir"
+    classes_per_client: int = 2       # for partition="class"
+    unbalanced: bool = False          # lognormal sample-count imbalance
+    unbalanced_sigma: float = 1.0
+    data_amount: float = 1.0          # fraction of samples used (Fig. 7b)
+    batch_size: int = 64              # paper default B=64
+    test_batch_size: int = 256
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    rounds: int = 10                  # R
+    clients_per_round: int = 10       # C, selected clients per round
+    selection: str = "random"         # selection stage strategy
+    aggregation: str = "fedavg"       # aggregation stage strategy
+    test_every: int = 1
+    # Compression stage (server->client direction); "none" | "stc" | "int8"
+    compression: str = "none"
+    track: bool = True
+
+
+@dataclass(frozen=True)
+class ClientConfig:
+    local_epochs: int = 10            # paper default E=10
+    optimizer: str = "sgd"            # sgd | adamw
+    lr: float = 0.01
+    momentum: float = 0.9             # paper: SGD momentum 0.9
+    weight_decay: float = 0.0
+    # client->server update compression: "none" | "stc" | "int8"
+    compression: str = "none"
+    stc_sparsity: float = 0.01        # keep fraction for STC top-k
+    # FedProx proximal term (0 disables; strategy plugin can override train)
+    proximal_mu: float = 0.0
+    max_grad_norm: float = 0.0        # 0 = no clipping
+
+
+@dataclass(frozen=True)
+class SystemHeterogeneityConfig:
+    """Lightweight system-heterogeneity simulation (paper §V-A)."""
+
+    enabled: bool = False
+    # Relative training-speed ratios of simulated device classes, modeled on
+    # AI-Benchmark [37] mobile-SoC training-throughput spreads.
+    speed_ratios: Tuple[float, ...] = (1.0, 1.53, 2.42, 3.1, 4.4)
+    # Optional per-message network latency (seconds) added by the transport.
+    network_latency: float = 0.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class ResourceConfig:
+    """Distributed-training optimization (paper §VI)."""
+
+    num_devices: int = 1              # M simulated accelerators
+    allocation: str = "greedy_ada"    # greedy_ada | random | slowest | one_per_device
+    default_client_time: float = 1.0  # t: default training time before profiling
+    momentum: float = 0.5             # m: moving-average momentum for t update
+    distributed: bool = False         # use jax device mesh when available
+
+
+@dataclass(frozen=True)
+class TrackingConfig:
+    enabled: bool = True
+    backend: str = "memory"           # memory | jsonl
+    out_dir: str = "artifacts/tracking"
+
+
+@dataclass(frozen=True)
+class Config:
+    """Top-level EasyFL configuration (``repro.init``)."""
+
+    task_id: str = "task"
+    model: str = "femnist_cnn"        # registered model name
+    seed: int = 0
+    data: DataConfig = field(default_factory=DataConfig)
+    server: ServerConfig = field(default_factory=ServerConfig)
+    client: ClientConfig = field(default_factory=ClientConfig)
+    system_heterogeneity: SystemHeterogeneityConfig = field(
+        default_factory=SystemHeterogeneityConfig
+    )
+    resources: ResourceConfig = field(default_factory=ResourceConfig)
+    tracking: TrackingConfig = field(default_factory=TrackingConfig)
+
+    @staticmethod
+    def make(overrides: Optional[Mapping[str, Any]] = None) -> "Config":
+        return merge(Config(), overrides or {})
+
+
+# ---------------------------------------------------------------------------
+# Architecture configuration (model zoo)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8                # routed experts
+    top_k: int = 2
+    n_shared: int = 0                 # always-on shared experts
+    d_expert: int = 0                 # per-expert FFN hidden dim
+    aux_loss_weight: float = 0.01     # router load-balance loss
+    first_dense_layers: int = 0       # leading layers that use a dense FFN
+    dense_d_ff: int = 0               # FFN dim for those dense layers
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434)."""
+
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0              # 0 = no query compression (V2-Lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str = "arch"
+    family: str = "dense"             # dense | moe | ssm | hybrid | vlm | audio
+    reference: str = ""               # citation for the hyperparameters
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0                 # 0 -> d_model // n_heads
+    d_ff: int = 1024
+    vocab: int = 32000
+    act: str = "swiglu"               # swiglu | geglu | gelu | sq_relu
+    norm: str = "rmsnorm"             # rmsnorm | layernorm
+    qk_norm: bool = False             # per-head RMSNorm on q,k (Qwen3)
+    rope_theta: float = 10_000.0
+    pos_embedding: str = "rope"       # rope | learned | none
+    tie_embeddings: bool = False
+    max_seq_len: int = 524_288        # positional capacity for dry-run shapes
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+
+    # ssm (rwkv6)
+    rwkv_head_dim: int = 64
+
+    # hybrid (recurrentgemma): per-layer mixer pattern, cycled over n_layers
+    block_pattern: Tuple[str, ...] = ()   # entries: "attn" | "rglru" | "local_attn"
+    window: int = 0                    # local-attention window (training)
+    lru_width: int = 0                 # RG-LRU recurrence width (0 -> d_model)
+    conv1d_width: int = 4              # temporal conv in recurrent block
+
+    # enc-dec / multimodal stubs
+    encoder_layers: int = 0            # >0 -> encoder-decoder (whisper)
+    n_frames: int = 0                  # audio frames / vision patches (stub input)
+
+    # decode behaviour
+    decode_window: int = 8192          # sliding-window KV for long_500k decode
+    supports_long_context: bool = True # False -> skip long_500k (noted in DESIGN.md)
+
+    dtype: str = "bfloat16"            # activation/compute dtype
+    param_dtype: str = "float32"
+
+    # ---------------- derived helpers ----------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def layer_pattern(self) -> Tuple[str, ...]:
+        """Mixer type for every layer."""
+        if self.family == "ssm":
+            return ("rwkv6",) * self.n_layers
+        if self.block_pattern:
+            pat = []
+            i = 0
+            while len(pat) < self.n_layers:
+                pat.append(self.block_pattern[i % len(self.block_pattern)])
+                i += 1
+            return tuple(pat)
+        if self.mla is not None:
+            return ("mla",) * self.n_layers
+        return ("attn",) * self.n_layers
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: <=2 layers, d_model<=512, <=4 experts."""
+        d_model = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4)
+        n_kv = max(1, min(self.n_kv_heads, n_heads))
+        # keep the q:kv grouping ratio >= 1 and divisible
+        while n_heads % n_kv:
+            n_kv -= 1
+        head_dim = 32 if self.head_dim else 0
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe,
+                n_experts=min(self.moe.n_experts, 4),
+                top_k=min(self.moe.top_k, 2),
+                n_shared=min(self.moe.n_shared, 1),
+                d_expert=min(self.moe.d_expert or 128, 128),
+                first_dense_layers=min(self.moe.first_dense_layers, 1),
+                dense_d_ff=min(self.moe.dense_d_ff or 256, 256),
+            )
+        mla = None
+        if self.mla is not None:
+            mla = MLAConfig(
+                kv_lora_rank=64, q_lora_rank=0,
+                qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32,
+            )
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=2 if not self.encoder_layers else 2,
+            encoder_layers=2 if self.encoder_layers else 0,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            head_dim=head_dim,
+            d_ff=min(self.d_ff, 512),
+            vocab=min(self.vocab, 512),
+            moe=moe,
+            mla=mla,
+            window=min(self.window, 64) if self.window else 0,
+            lru_width=min(self.lru_width, d_model) if self.lru_width else 0,
+            n_frames=min(self.n_frames, 16) if self.n_frames else 0,
+            max_seq_len=4096,
+            decode_window=256,
+            dtype="float32",
+        )
+
+    # Parameter count (approximate, used for MODEL_FLOPS = 6·N·D)
+    def param_count(self, active_only: bool = False) -> int:
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        for mixer in self.layer_pattern:
+            if mixer == "attn" or mixer == "local_attn":
+                q = d * self.n_heads * hd
+                kv = 2 * d * self.n_kv_heads * hd
+                o = self.n_heads * hd * d
+                per_layer += q + kv + o
+            elif mixer == "mla":
+                m = self.mla
+                per_layer += d * m.kv_lora_rank            # kv down
+                per_layer += d * m.qk_rope_head_dim        # shared k rope
+                per_layer += m.kv_lora_rank * self.n_heads * (
+                    m.qk_nope_head_dim + m.v_head_dim)     # kv up
+                qd = m.q_lora_rank or d
+                if m.q_lora_rank:
+                    per_layer += d * m.q_lora_rank
+                per_layer += qd * self.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                per_layer += self.n_heads * m.v_head_dim * d
+            elif mixer == "rwkv6":
+                per_layer += 6 * d * d // 1 + 2 * d * 32   # r,k,v,g,o + decay lora (approx)
+            elif mixer == "rglru":
+                w = self.lru_width or d
+                per_layer += 2 * d * w + w * d + w * self.conv1d_width  # in-proj x2, out, conv
+                per_layer += 2 * w                          # gates (diag recurrence params)
+        # FFN
+        for li, mixer in enumerate(self.layer_pattern):
+            if self.moe is not None:
+                if li < self.moe.first_dense_layers:
+                    ff = self.moe.dense_d_ff or self.d_ff
+                    mult = 3 if self.act in ("swiglu", "geglu") else 2
+                    per_layer_ffn = mult * d * ff
+                else:
+                    de = self.moe.d_expert or self.d_ff
+                    mult = 3 if self.act in ("swiglu", "geglu") else 2
+                    n_routed = self.moe.top_k if active_only else self.moe.n_experts
+                    per_layer_ffn = (n_routed + self.moe.n_shared) * mult * d * de
+                    per_layer_ffn += d * self.moe.n_experts  # router
+            else:
+                mult = 3 if self.act in ("swiglu", "geglu") else 2
+                per_layer_ffn = mult * d * self.d_ff
+            per_layer += per_layer_ffn
+        enc = 0
+        if self.encoder_layers:
+            # encoder self-attn + ffn + decoder cross-attn already included via
+            # layer_pattern for decoder; approximate encoder similarly
+            mult = 3 if self.act in ("swiglu", "geglu") else 2
+            enc_layer = 4 * d * d + mult * d * self.d_ff
+            enc = self.encoder_layers * enc_layer
+            enc += self.n_layers * 4 * d * d  # cross-attention per decoder layer
+        return emb + per_layer + enc
+
+
+_TYPE_REGISTRY = {
+    "DataConfig": DataConfig,
+    "ServerConfig": ServerConfig,
+    "ClientConfig": ClientConfig,
+    "SystemHeterogeneityConfig": SystemHeterogeneityConfig,
+    "ResourceConfig": ResourceConfig,
+    "TrackingConfig": TrackingConfig,
+    "MoEConfig": MoEConfig,
+    "MLAConfig": MLAConfig,
+}

@@ -1,0 +1,115 @@
+"""Jitted local-training functions, cached so all simulated clients of a task
+share one compiled program (clients differ only in data).
+
+The local loop runs E epochs of full-shape minibatches (cyclic indexing pads
+the final partial batch so every client compiles exactly one step shape).
+FedProx support: optional proximal term mu/2 ||w - w_global||^2 added to the
+client loss (strategy plugs in via ``proximal_mu``).
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.small import FLModel
+from repro.optim import Optimizer, apply_updates, get_optimizer
+
+
+@lru_cache(maxsize=64)
+def make_client_step(model: FLModel, optimizer: Optimizer,
+                     proximal_mu: float = 0.0, max_grad_norm: float = 0.0):
+    """(params, opt_state, batch, global_params) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, batch, global_params):
+        loss, metrics = model.loss_and_metrics(params, batch)
+        if proximal_mu > 0.0:
+            prox = sum(
+                jnp.sum(jnp.square(p.astype(jnp.float32) - g.astype(jnp.float32)))
+                for p, g in zip(jax.tree_util.tree_leaves(params),
+                                jax.tree_util.tree_leaves(global_params)))
+            loss = loss + 0.5 * proximal_mu * prox
+        return loss, metrics
+
+    @jax.jit
+    def step(params, opt_state, batch, global_params):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, global_params)
+        if max_grad_norm > 0.0:
+            from repro.optim import clip_by_global_norm
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return step
+
+
+@lru_cache(maxsize=64)
+def make_eval_step(model: FLModel):
+    @jax.jit
+    def step(params, batch):
+        _, metrics = model.loss_and_metrics(params, batch)
+        return metrics
+    return step
+
+
+def cyclic_batches(n: int, batch_size: int, seed: int):
+    """Full-shape batch index arrays covering all n samples (last batch wraps)."""
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(n)
+    n_batches = max(1, -(-n // batch_size))
+    padded = np.concatenate([idx, idx[: (-len(idx)) % batch_size or 0]])
+    if len(padded) < n_batches * batch_size:   # n < batch_size: cycle
+        reps = -(-n_batches * batch_size // n)
+        padded = np.tile(idx, reps)[: n_batches * batch_size]
+    return padded.reshape(n_batches, batch_size)
+
+
+def local_train(model: FLModel, params, data_x, data_y, *,
+                epochs: int, batch_size: int, optimizer: Optimizer,
+                proximal_mu: float = 0.0, max_grad_norm: float = 0.0,
+                seed: int = 0, global_params=None) -> Tuple[Any, Dict[str, float]]:
+    """Run E local epochs; returns (new_params, mean metrics)."""
+    step = make_client_step(model, optimizer, proximal_mu, max_grad_norm)
+    opt_state = optimizer.init(params)
+    gp = global_params if global_params is not None else params
+    losses, accs, n_batches = [], [], 0
+    for e in range(epochs):
+        for bidx in cyclic_batches(len(data_x), batch_size, seed + e):
+            batch = {"x": jnp.asarray(data_x[bidx]),
+                     "y": jnp.asarray(data_y[bidx])}
+            params, opt_state, metrics = step(params, opt_state, batch, gp)
+            losses.append(float(metrics["loss"]))
+            accs.append(float(metrics.get("accuracy", np.nan)))
+            n_batches += 1
+    return params, {
+        "loss": float(np.mean(losses)),
+        "accuracy": float(np.nanmean(accs)),
+        "batches": float(n_batches),
+    }
+
+
+def evaluate(model: FLModel, params, data_x, data_y,
+             batch_size: int = 256) -> Dict[str, float]:
+    step = make_eval_step(model)
+    losses, accs, weights = [], [], []
+    for s in range(0, len(data_x), batch_size):
+        xb = data_x[s : s + batch_size]
+        yb = data_y[s : s + batch_size]
+        if len(xb) < batch_size:  # pad to compiled shape, weight by true size
+            pad = batch_size - len(xb)
+            xb = np.concatenate([xb, xb[:1].repeat(pad, axis=0)])
+            yb = np.concatenate([yb, yb[:1].repeat(pad, axis=0)])
+        m = step(params, {"x": jnp.asarray(xb), "y": jnp.asarray(yb)})
+        losses.append(float(m["loss"]))
+        accs.append(float(m["accuracy"]))
+        weights.append(min(batch_size, len(data_x) - s))
+    w = np.asarray(weights, dtype=np.float64)
+    return {"loss": float(np.average(losses, weights=w)),
+            "accuracy": float(np.average(accs, weights=w))}

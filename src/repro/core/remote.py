@@ -1,0 +1,131 @@
+"""Remote training services (paper §VII): server/client as RPC services.
+
+``RemoteClient`` wraps a :class:`Client` behind an RPC server and registers
+itself with the service registry (the registor role).  ``RemoteServer``
+queries the registry for live clients, fans training requests out in
+parallel (asynchronous requests, Fig. 4a), and runs the same stage pipeline
+as the standalone runtime — the training-flow abstraction decouples training
+from communication, so this file contains *no* algorithm logic.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.comm.transport import RPCServer, SocketTransport, parallel_requests
+from repro.core import compression as comp
+from repro.core.client import Client
+from repro.core.config import Config
+from repro.core.server import Server
+from repro.deploy.discovery import Registry
+from repro.tracking import Tracker
+
+# shared in-process registry default (a real deploy points at etcd/k8s DNS)
+DEFAULT_REGISTRY = Registry()
+
+
+class RemoteClient:
+    """Client service: start_client(args)."""
+
+    def __init__(self, client: Client, registry: Optional[Registry] = None,
+                 host: str = "127.0.0.1", port: int = 0,
+                 latency: float = 0.0):
+        self.client = client
+        self.registry = registry or DEFAULT_REGISTRY
+        self.latency = latency
+        self.rpc = RPCServer(self._handle, host=host, port=port)
+
+    def start(self) -> "RemoteClient":
+        self.rpc.start()
+        # registor: fetch own address, register with the registry (Fig. 4b)
+        self.registry.register(self.client.client_id, self.rpc.address,
+                               role="client")
+        return self
+
+    def stop(self) -> None:
+        self.registry.deregister(self.client.client_id)
+        self.rpc.stop()
+
+    def _handle(self, method: str, payload: Any) -> Any:
+        if self.latency:
+            time.sleep(self.latency)
+        if method == "train":
+            result = self.client.run_round(payload["payload"],
+                                           payload["round_id"])
+            return _to_numpy(result)
+        if method == "test":
+            params = comp.decompress(payload["params"])
+            return self.client.test(params)
+        if method == "ping":
+            return {"client_id": self.client.client_id, "ok": True}
+        raise ValueError(f"unknown method {method}")
+
+
+class RemoteServer:
+    """Server service: start_server(args)."""
+
+    def __init__(self, server: Server, cfg: Config,
+                 registry: Optional[Registry] = None,
+                 tracker: Optional[Tracker] = None):
+        self.server = server
+        self.cfg = cfg
+        self.registry = registry or DEFAULT_REGISTRY
+        self.tracker = tracker or Tracker()
+        self.transports: Dict[str, SocketTransport] = {}
+        self.history: List[Dict[str, float]] = []
+
+    def start(self) -> "RemoteServer":
+        if self.server.params is None:
+            import jax
+            self.server.params = self.server.model.init(
+                jax.random.PRNGKey(self.cfg.seed))
+        return self
+
+    def discover(self) -> List[str]:
+        """Query the registry for live clients; connect transports."""
+        regs = [r for r in self.registry.list()
+                if r.metadata.get("role") == "client"]
+        for r in regs:
+            if r.client_id not in self.transports:
+                self.transports[r.client_id] = SocketTransport(r.address)
+        return sorted(r.client_id for r in regs)
+
+    def run_round(self, round_id: int) -> Dict[str, float]:
+        client_ids = self.discover()
+        selected = self.server.selection(client_ids, round_id)
+        payload = self.server.distribution(selected)
+        wire = {"payload": _to_numpy(payload), "round_id": round_id}
+        t0 = time.perf_counter()
+        transports = [self.transports[c] for c in selected]
+        results = parallel_requests(transports, "train",
+                                    [wire] * len(selected))
+        dist_latency = time.perf_counter() - t0
+        self.server.aggregation(results)
+        metrics = {
+            "round_time": dist_latency,
+            "clients": len(selected),
+            "train_loss": float(np.mean([r["metrics"]["loss"]
+                                         for r in results])),
+        }
+        metrics.update(self.server.test())
+        self.tracker.track_round(self.cfg.task_id, round_id, **metrics)
+        self.history.append(metrics)
+        return metrics
+
+    def run(self, rounds: Optional[int] = None) -> List[Dict[str, float]]:
+        for r in range(rounds or self.cfg.server.rounds):
+            self.run_round(r)
+        return self.history
+
+    def stop(self) -> None:
+        for t in self.transports.values():
+            t.close()
+
+
+def _to_numpy(tree):
+    import jax
+    return jax.tree_util.tree_map(
+        lambda x: np.asarray(x) if hasattr(x, "dtype") else x, tree)

@@ -1,0 +1,148 @@
+"""Round orchestration: the runtime behind ``easyfl.run()``.
+
+Combines every platform module per the FL life cycle (§III):
+  simulation manager (heterogeneity) + data manager + server/client stages +
+  distribution manager (GreedyAda, §VI) + tracking manager (§V-C).
+
+Timing model: each client's *measured* local-training time is recorded; the
+system-heterogeneity simulator scales it by the client's device-class speed
+ratio (virtual clock — DESIGN.md §2).  The round's virtual duration is the
+makespan of the device groups, exactly Eq. 1:
+
+    T_round = max_g  sum_{c in g} simulated_time(c)
+
+GreedyAda is fed the *simulated* times (that is what a real heterogeneous
+deployment would measure), so the scheduler optimizes against stragglers.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.client import Client
+from repro.core.config import Config
+from repro.core.server import Server
+from repro.core import compression as comp
+from repro.data.fed_data import FederatedDataset
+from repro.sched.greedyada import (
+    GreedyAda, one_per_device, random_allocation, slowest_allocation,
+)
+from repro.simulation.heterogeneity import SystemHeterogeneity
+from repro.tracking import Tracker
+
+
+class Trainer:
+    def __init__(self, config: Config, model, fed_data: FederatedDataset,
+                 tracker: Optional[Tracker] = None,
+                 server: Optional[Server] = None,
+                 client_cls=Client):
+        self.cfg = config
+        self.model = model
+        self.fed_data = fed_data
+        self.tracker = tracker or Tracker(config.tracking.backend,
+                                          config.tracking.out_dir)
+        self.server = server or Server(model, config, fed_data.test)
+        self.client_cls = client_cls
+        self.clients: Dict[str, Client] = {}
+        self.het = SystemHeterogeneity(config.system_heterogeneity)
+        self.scheduler = GreedyAda(
+            num_devices=max(1, config.resources.num_devices),
+            default_time=config.resources.default_client_time,
+            momentum=config.resources.momentum)
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def client(self, cid: str) -> Client:
+        if cid not in self.clients:
+            self.clients[cid] = self.client_cls(
+                cid, self.model, self.fed_data.clients[cid],
+                self.cfg.client, batch_size=self.cfg.data.batch_size)
+        return self.clients[cid]
+
+    def _allocate(self, selected: List[str], round_id: int) -> List[List[str]]:
+        name = self.cfg.resources.allocation
+        M = max(1, self.cfg.resources.num_devices)
+        if name == "greedy_ada":
+            return self.scheduler.allocate(selected)
+        if name == "random":
+            return random_allocation(selected, M, seed=round_id)
+        if name == "slowest":
+            est = {c: self.scheduler._estimate(c) for c in selected}
+            return slowest_allocation(selected, M, est)
+        if name == "one_per_device":
+            return one_per_device(selected)
+        raise ValueError(f"unknown allocation {name!r}")
+
+    # ------------------------------------------------------------------
+    def run_round(self, round_id: int) -> Dict[str, float]:
+        server = self.server
+        selected = server.selection(self.fed_data.client_ids, round_id)
+        payload = server.distribution(selected)
+        groups = self._allocate(selected, round_id)
+
+        results, sim_times, wall_times = [], {}, {}
+        t_wall0 = time.perf_counter()
+        down_bytes = payload.get("payload_bytes", 0) * len(selected)
+        up_bytes = 0
+        for group in groups:
+            for cid in group:
+                res = self.client(cid).run_round(payload, round_id)
+                results.append(res)
+                wall_times[cid] = res["train_time"]
+                sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
+                up_bytes += res.get(
+                    "payload_bytes", comp.payload_bytes(res["update"]))
+
+        # Eq. 1 makespan under the virtual clock
+        round_virtual = max(
+            (sum(sim_times[c] for c in g) for g in groups if g), default=0.0)
+        self.scheduler.update(sim_times)
+        server.aggregation(results)
+        wall = time.perf_counter() - t_wall0
+
+        metrics = {
+            "round_time": round_virtual,
+            "wall_time": wall,
+            "clients": len(selected),
+            "comm_down_bytes": down_bytes,
+            "comm_up_bytes": up_bytes,
+            "train_loss": float(np.mean([r["metrics"]["loss"] for r in results])),
+        }
+        if self.cfg.server.test_every and \
+           (round_id + 1) % self.cfg.server.test_every == 0:
+            metrics.update(server.test())
+
+        if self.cfg.tracking.enabled:
+            self.tracker.track_round(self.cfg.task_id, round_id, **metrics)
+            for r in results:
+                self.tracker.track_client(
+                    self.cfg.task_id, round_id, r["client_id"],
+                    train_time=wall_times[r["client_id"]],
+                    simulated_time=sim_times[r["client_id"]],
+                    **r["metrics"])
+        self.history.append(metrics)
+        return metrics
+
+    # ------------------------------------------------------------------
+    def run(self, callback: Optional[Callable] = None) -> Dict[str, Any]:
+        if self.server.params is None:
+            import jax
+            self.server.params = self.model.init(
+                jax.random.PRNGKey(self.cfg.seed))
+        if self.cfg.tracking.enabled:
+            from repro.core.config import to_dict
+            self.tracker.create_task(self.cfg.task_id, to_dict(self.cfg))
+        for r in range(self.cfg.server.rounds):
+            self.run_round(r)
+        summary = {
+            "task_id": self.cfg.task_id,
+            "rounds": self.cfg.server.rounds,
+            "final": self.history[-1] if self.history else {},
+            "history": self.history,
+            "params": self.server.params,
+        }
+        if callback is not None:
+            callback(summary)
+        return summary

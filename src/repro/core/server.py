@@ -1,0 +1,63 @@
+"""FL server with the granular training-flow stages (paper Fig. 3, left).
+
+Stage pipeline per round:
+    selection -> compression -> distribution -> (clients run) -> aggregation
+
+The server is executor-agnostic: ``distribution`` hands payloads to an
+executor (standalone loop, GreedyAda device groups, or remote transports)
+and gets client results back; the *scheduling* concern lives in
+``core/rounds.py``, the *transport* concern in ``repro.comm``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.aggregation import fedavg, get_aggregator
+from repro.core.config import Config
+from repro.core.local_train import evaluate
+from repro.models.small import FLModel
+
+
+class Server:
+    def __init__(self, model: FLModel, cfg: Config, test_data=None,
+                 rng: Optional[np.random.RandomState] = None):
+        self.model = model
+        self.cfg = cfg
+        self.test_data = test_data
+        self.rng = rng or np.random.RandomState(cfg.seed)
+        self.params = None  # set by runtime (init or checkpoint)
+
+    # ------------------------------------------------------------------
+    # stages
+    # ------------------------------------------------------------------
+    def selection(self, client_ids: Sequence[str], round_id: int) -> List[str]:
+        k = min(self.cfg.server.clients_per_round, len(client_ids))
+        return list(self.rng.choice(list(client_ids), size=k, replace=False))
+
+    def compression(self, params: Any) -> Any:
+        return comp.compress(params, self.cfg.server.compression,
+                             self.cfg.client.stc_sparsity)
+
+    def distribution(self, selected: List[str]) -> Dict[str, Any]:
+        """Build the payload distributed to every selected client."""
+        payload = {"params": self.compression(self.params)}
+        payload["payload_bytes"] = comp.payload_bytes(payload["params"])
+        return payload
+
+    def aggregation(self, results: List[Dict[str, Any]]) -> None:
+        updates = [comp.decompress(r["update"]) for r in results]
+        counts = [r["num_samples"] for r in results]
+        agg = get_aggregator(self.cfg.server.aggregation)
+        self.params = agg(self.params, updates, counts)
+
+    # ------------------------------------------------------------------
+    def test(self) -> Dict[str, float]:
+        if self.test_data is None:
+            return {}
+        return evaluate(self.model, self.params, self.test_data.x,
+                        self.test_data.y,
+                        batch_size=self.cfg.data.test_batch_size)

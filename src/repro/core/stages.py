@@ -1,0 +1,24 @@
+"""Training-flow abstraction (paper §V-B, Fig. 3).
+
+A federated round is decomposed into granular, individually-overridable
+stages.  Server:   selection -> compression -> distribution -> aggregation
+Client:  download -> decompression -> train/test -> compression ->
+         encryption -> upload.
+
+The paper's survey (Table VII) shows ~30% of new FL algorithms change one
+stage and ~57% change two; subclass :class:`repro.core.client.Client` or
+:class:`repro.core.server.Server` and replace only those methods (see
+``core/strategies`` for FedProx — train stage — and STC — compression
+stages).  This module holds the stage names (for tracking/telemetry) and the
+default no-op encryption hook.
+"""
+from __future__ import annotations
+
+SERVER_STAGES = ("selection", "compression", "distribution", "aggregation")
+CLIENT_STAGES = ("download", "decompression", "train", "test",
+                 "compression", "encryption", "upload")
+
+
+def identity_stage(payload):
+    """Default pass-through used by optional stages (e.g. encryption)."""
+    return payload

@@ -1,0 +1,5 @@
+from repro.core.strategies.fedprox import FedProxClient, fedprox_config  # noqa: F401
+from repro.core.strategies.stc import STCClient, STCServer, stc_config  # noqa: F401
+from repro.core.strategies.fedreid import FedReIDClient  # noqa: F401
+from repro.core.strategies.powerofchoice import PowerOfChoiceServer  # noqa: F401
+from repro.core.strategies.fedbuff import FedBuffServer  # noqa: F401

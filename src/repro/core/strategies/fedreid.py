@@ -1,0 +1,41 @@
+"""FedReID-style application client (paper §VIII-H case study).
+
+FedReID [Zhuang et al., ACMMM'20] federates person re-identification over
+nine heterogeneous datasets — per Table VII it changes the *aggregation* and
+*train* stages.  The reproduction models its platform-relevant properties:
+clients with wildly unbalanced datasets (the largest dataset dominates the
+round, Fig. 9) and a train-stage override (a local identity-classifier head
+that is excluded from aggregation — "customize train and test in clients").
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.client import Client
+
+
+class FedReIDClient(Client):
+    """Train-stage override: keep a client-local head out of aggregation.
+
+    The last dense layer ("fc" in the small-model zoo) is treated as the
+    local identity classifier: its update is zeroed before upload, so
+    aggregation only merges the shared backbone — matching FedReID's
+    per-client identity spaces."""
+
+    LOCAL_KEYS = ("fc", "fc2")
+
+    def train(self, params: Any, round_id: int) -> Dict[str, Any]:
+        result = super().train(params, round_id)
+
+        def zero_local(path, leaf):
+            names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if any(k in names for k in self.LOCAL_KEYS):
+                return jnp.zeros_like(leaf)
+            return leaf
+
+        result["update"] = jax.tree_util.tree_map_with_path(
+            zero_local, result["update"])
+        return result

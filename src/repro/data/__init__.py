@@ -1,0 +1,5 @@
+from repro.data.fed_data import (  # noqa: F401
+    ClientData, FederatedDataset, build_federated_data, register_dataset,
+)
+from repro.data.partition import partition  # noqa: F401
+from repro.data.synthetic import RawDataset, make_dataset  # noqa: F401

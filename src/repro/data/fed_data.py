@@ -1,0 +1,134 @@
+"""Federated dataset container + data manager (paper's *data manager*).
+
+``FederatedDataset`` holds per-client shards plus a held-out test set;
+``build_federated_data(config)`` is the simulation-manager entry point that
+turns a :class:`DataConfig` into a partitioned dataset (statistical
+heterogeneity per §V-A).  ``register_dataset`` plugs external datasets in,
+mirroring the paper's API (Table II).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.core.config import DataConfig
+from repro.data.partition import partition, unbalanced_sizes, apply_sizes
+from repro.data.synthetic import RawDataset, make_dataset
+
+_REGISTERED: Dict[str, Callable[..., RawDataset]] = {}
+
+
+def register_dataset(name: str, factory_or_data) -> None:
+    """Register an external dataset (RawDataset or zero-arg factory)."""
+    if isinstance(factory_or_data, RawDataset):
+        _REGISTERED[name] = lambda **kw: factory_or_data
+    else:
+        _REGISTERED[name] = factory_or_data
+
+
+@dataclass
+class ClientData:
+    x: np.ndarray
+    y: np.ndarray
+
+    def __len__(self):
+        return len(self.x)
+
+    def batches(self, batch_size: int, seed: int = 0,
+                drop_remainder: bool = False) -> Iterator[Dict[str, np.ndarray]]:
+        idx = np.random.RandomState(seed).permutation(len(self.x))
+        stop = len(idx) - (len(idx) % batch_size) if drop_remainder else len(idx)
+        for s in range(0, max(stop, 0), batch_size):
+            sel = idx[s : s + batch_size]
+            if len(sel) == 0:
+                continue
+            yield {"x": self.x[sel], "y": self.y[sel]}
+
+
+@dataclass
+class FederatedDataset:
+    clients: Dict[str, ClientData]
+    test: ClientData
+    num_classes: int
+
+    @property
+    def client_ids(self) -> List[str]:
+        return sorted(self.clients)
+
+    def sizes(self) -> Dict[str, int]:
+        return {cid: len(c) for cid, c in self.clients.items()}
+
+    def stats(self) -> Dict[str, float]:
+        sizes = np.array([len(c) for c in self.clients.values()])
+        return {
+            "num_clients": len(self.clients),
+            "total_samples": int(sizes.sum()),
+            "min": int(sizes.min()),
+            "max": int(sizes.max()),
+            "mean": float(sizes.mean()),
+        }
+
+
+def _natural_partition(data: RawDataset, n_clients: int,
+                       seed: int) -> List[np.ndarray]:
+    """LEAF-style realistic partition by the natural client id."""
+    assert data.natural_client is not None
+    owners = data.natural_client
+    uniq = np.unique(owners)
+    rng = np.random.RandomState(seed)
+    if len(uniq) > n_clients:
+        # merge owners into n_clients groups
+        groups = np.array_split(rng.permutation(uniq), n_clients)
+    else:
+        groups = [np.array([u]) for u in uniq]
+    return [np.sort(np.where(np.isin(owners, g))[0]) for g in groups]
+
+
+def build_federated_data(cfg: DataConfig) -> FederatedDataset:
+    if cfg.dataset in _REGISTERED:
+        raw = _REGISTERED[cfg.dataset](seed=cfg.seed)
+    else:
+        raw = make_dataset(cfg.dataset, seed=cfg.seed)
+
+    n = len(raw.x)
+    rng = np.random.RandomState(cfg.seed)
+    perm = rng.permutation(n)
+    n_test = max(1, int(0.1 * n))
+    test_idx, train_idx = perm[:n_test], perm[n_test:]
+
+    if cfg.data_amount < 1.0:  # Fig. 7b: fraction of samples used
+        keep = max(1, int(len(train_idx) * cfg.data_amount))
+        train_idx = train_idx[:keep]
+
+    labels = raw.y[train_idx]
+    flat_labels = labels if labels.ndim == 1 else labels[:, 0]
+
+    if cfg.partition == "realistic" and raw.natural_client is not None:
+        sub = RawDataset(raw.x[train_idx], raw.y[train_idx], raw.num_classes,
+                         raw.natural_client[train_idx])
+        parts = _natural_partition(sub, cfg.num_clients, cfg.seed)
+        if cfg.unbalanced:
+            sizes = unbalanced_sizes(sum(len(p) for p in parts), len(parts),
+                                     cfg.unbalanced_sigma, cfg.seed)
+            parts = apply_sizes(parts, sizes, cfg.seed)
+    else:
+        method = cfg.partition if cfg.partition != "realistic" else "iid"
+        parts = partition(
+            flat_labels, cfg.num_clients, method=method, alpha=cfg.dir_alpha,
+            classes_per_client=cfg.classes_per_client,
+            unbalanced=cfg.unbalanced, sigma=cfg.unbalanced_sigma,
+            seed=cfg.seed)
+
+    clients = {}
+    for i, p in enumerate(parts):
+        if len(p) == 0:
+            continue
+        sel = train_idx[p]
+        clients[f"client_{i:04d}"] = ClientData(raw.x[sel], raw.y[sel])
+    return FederatedDataset(
+        clients=clients,
+        test=ClientData(raw.x[test_idx], raw.y[test_idx]),
+        num_classes=raw.num_classes,
+    )

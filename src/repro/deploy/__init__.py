@@ -1,0 +1,4 @@
+from repro.deploy.discovery import Registor, Registration, Registry  # noqa: F401
+from repro.deploy.manifests import (  # noqa: F401
+    compose, dockerfile, k8s_manifests, write_artifacts,
+)

@@ -1,0 +1,43 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware set ``REPRO_KERNEL_INTERPRET=0`` (or pass interpret=False) to
+run the compiled kernels.
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.kernels import fedavg_agg, quant, rwkv6_scan, stc_topk
+
+_INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+
+
+def fedavg_aggregate(updates, weights, interpret: bool = None):
+    return fedavg_agg.fedavg_aggregate(
+        updates, weights,
+        interpret=_INTERPRET if interpret is None else interpret)
+
+
+def stc_compress(x, keep_frac: float = 0.01, interpret: bool = None):
+    return stc_topk.stc_compress(
+        x, keep_frac, interpret=_INTERPRET if interpret is None else interpret)
+
+
+def quantize(x, interpret: bool = None):
+    return quant.quantize(
+        x, interpret=_INTERPRET if interpret is None else interpret)
+
+
+def dequantize(q, s, shape, dtype=jnp.float32, interpret: bool = None):
+    return quant.dequantize(
+        q, s, tuple(shape), dtype,
+        interpret=_INTERPRET if interpret is None else interpret)
+
+
+def wkv6(r, k, v, logw, u, s0, interpret: bool = None):
+    return rwkv6_scan.wkv6(
+        r, k, v, logw, u, s0,
+        interpret=_INTERPRET if interpret is None else interpret)

@@ -1,0 +1,100 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import TILE_C, TILE_R
+from repro.kernels.stc_topk import BISECT_ITERS
+from repro.kernels.stc_topk import TILE_C as STC_C
+from repro.kernels.stc_topk import TILE_R as STC_R
+
+
+def fedavg_ref(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """(N, D), (N,) -> (D,)."""
+    return jnp.einsum("n,nd->d", weights.astype(jnp.float32),
+                      updates.astype(jnp.float32))
+
+
+def _stc_tile_ref(x, keep_frac):
+    ax = jnp.abs(x.astype(jnp.float32))
+    n = x.size
+    target = jnp.asarray(max(int(round(keep_frac * n)), 1), jnp.float32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum((ax > mid).astype(jnp.float32))
+        lo = jnp.where(count > target, mid, lo)
+        hi = jnp.where(count > target, hi, mid)
+        return lo, hi
+
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body,
+                               (jnp.zeros((), jnp.float32),
+                                jnp.max(ax) + 1e-12))
+    t = 0.5 * (lo + hi)
+    mask = ax > t
+    nnz = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    mu = jnp.sum(jnp.where(mask, ax, 0.0)) / nnz
+    return jnp.where(mask, jnp.sign(x.astype(jnp.float32)) * mu, 0.0)
+
+
+def stc_ref(x: jnp.ndarray, keep_frac: float = 0.01) -> jnp.ndarray:
+    """Tile-local STC, bit-matching the kernel's per-tile bisection."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    tile = STC_R * STC_C
+    pad = (-flat.size) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    tiles = flat.reshape(-1, STC_R, STC_C)
+    out = jax.vmap(lambda t: _stc_tile_ref(t, keep_frac))(tiles)
+    return out.reshape(-1)[: flat.size - pad].reshape(shape).astype(x.dtype)
+
+
+def quantize_ref(x: jnp.ndarray):
+    flat = x.reshape(-1)
+    tile = TILE_R * TILE_C
+    pad = (-flat.size) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    tiles = flat.reshape(-1, TILE_R, TILE_C).astype(jnp.float32)
+    scales = jnp.maximum(jnp.max(jnp.abs(tiles), axis=(1, 2)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(tiles / scales[:, None, None]), -127, 127)
+    grid = tiles.shape[0]
+    return (q.astype(jnp.int8).reshape(grid * TILE_R, TILE_C),
+            scales.reshape(grid, 1))
+
+
+def dequantize_ref(q, s, shape, dtype=jnp.float32):
+    tiles = q.reshape(s.shape[0], TILE_R, TILE_C).astype(jnp.float32)
+    out = tiles * s[:, :, None]
+    size = 1
+    for d in shape:
+        size *= d
+    return out.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """Sequential (non-chunked) WKV6 recurrence — ground truth."""
+    B, T, H, hd = r.shape
+    f32 = jnp.float32
+    r, k, v, logw = (a.astype(f32) for a in (r, k, v, logw))
+    u = u.astype(f32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs            # (B,H,hd)
+        kv = jnp.einsum("bhi,bhj->bhij", kt, vt)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(wt)[..., None] * S + kv
+        return S, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, logw))
+    sT, ys = jax.lax.scan(step, s0.astype(f32), xs)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def wkv6_chunked_ref(r, k, v, logw, u, s0):
+    """The chunked pure-jnp path used by the model (oracle per DESIGN.md)."""
+    from repro.models.rwkv6 import wkv6_chunked
+    return wkv6_chunked(r, k, v, logw, u, s0)

@@ -1,0 +1,75 @@
+"""STC sparse-ternary compression Pallas kernel (paper compression stage).
+
+Per-tile top-k by *threshold bisection* — the TPU adaptation of STC's
+global magnitude top-k (DESIGN.md §2): a sort across a multi-GB update
+vector is hostile to the TPU memory system, whereas 16 elementwise
+count-reduce passes over a VMEM-resident tile are nearly free.  Each
+(8, 1024)-element tile independently:
+
+  1. bisects a threshold t so ~keep_frac of |x| exceeds t (16 iterations),
+  2. computes mu = mean(|x| | |x| > t),
+  3. emits sign(x) * mu where |x| > t, else 0.
+
+Tile-local selection guarantees an *exact* per-tile sparsity budget (global
+STC can concentrate its budget on one layer) — the trade-off is evaluated in
+``benchmarks/bench_compression.py``.  ``repro.kernels.ref.stc_ref`` is the
+bit-equivalent pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 8
+TILE_C = 1024
+BISECT_ITERS = 16
+
+
+def _stc_kernel(x_ref, o_ref, *, keep_frac: float):
+    x = x_ref[...].astype(jnp.float32)          # (TILE_R, TILE_C)
+    ax = jnp.abs(x)
+    n = x.size
+    target = jnp.asarray(max(int(round(keep_frac * n)), 1), jnp.float32)
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum((ax > mid).astype(jnp.float32))
+        lo = jnp.where(count > target, mid, lo)
+        hi = jnp.where(count > target, hi, mid)
+        return lo, hi
+
+    lo = jnp.zeros((), jnp.float32)
+    hi = jnp.max(ax) + 1e-12
+    lo, hi = jax.lax.fori_loop(0, BISECT_ITERS, body, (lo, hi))
+    t = 0.5 * (lo + hi)
+    mask = ax > t
+    nnz = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    mu = jnp.sum(jnp.where(mask, ax, 0.0)) / nnz
+    o_ref[...] = jnp.where(mask, jnp.sign(x) * mu, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("keep_frac", "interpret"))
+def stc_compress(x: jnp.ndarray, keep_frac: float = 0.01,
+                 interpret: bool = True) -> jnp.ndarray:
+    """Dense STC: returns the sparsified/ternarized tensor (same shape)."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    tile = TILE_R * TILE_C
+    pad = (-flat.size) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    grid = flat.size // tile
+    x2 = flat.reshape(grid * TILE_R, TILE_C)
+    out = pl.pallas_call(
+        functools.partial(_stc_kernel, keep_frac=keep_frac),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_R, TILE_C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2)
+    return out.reshape(-1)[: flat.size - pad].reshape(shape)

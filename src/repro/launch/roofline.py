@@ -1,0 +1,207 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s per link
+
+Terms per (arch x shape x mesh), in seconds:
+    compute    = HLO_FLOPs        / (chips * 197e12)
+    memory     = HLO_bytes        / (chips * 819e9)
+    collective = collective_bytes / (chips * 50e9)
+
+``cost_analysis()`` reports whole-program FLOPs/bytes (it already accounts
+for while-loop trip counts).  Collective bytes are *not* in cost_analysis —
+they are parsed from the post-SPMD HLO text: we sum the result-shape bytes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, and multiply ops inside while bodies (lax.scan over
+layers!) by the loop trip count recovered from the loop-condition constant.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link / chip
+DCN_BW = 12.5e9              # B/s / chip effective inter-pod (data-center NIC)
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|pred)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int] = field(default_factory=dict)
+    count_by_op: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    """Computation name -> its lines."""
+    comps: Dict[str, List[str]] = {}
+    current = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{",
+                     line)
+        if m and "{" in line:
+            current = m.group(1)
+            comps[current] = []
+        elif line.strip() == "}":
+            current = None
+        elif current is not None:
+            comps[current].append(line)
+    return comps
+
+
+def _while_trip_counts(hlo: str, comps: Dict[str, List[str]]) -> Dict[str, int]:
+    """body-computation name -> trip count (scan over layers etc.).
+
+    Heuristic: for each `while(... condition=%c, body=%b)`, find the compare
+    constant in the condition computation."""
+    trips: Dict[str, int] = {}
+    for m in re.finditer(r"while\([^)]*\),\s*condition=%?([\w\.\-]+),\s*"
+                         r"body=%?([\w\.\-]+)", hlo):
+        cond, body = m.group(1), m.group(2)
+        count = 1
+        for line in comps.get(cond, []):
+            for c in re.finditer(r"constant\((\d+)\)", line):
+                count = max(count, int(c.group(1)))
+        trips[body] = count
+    return trips
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    trips = _while_trip_counts(hlo, comps)
+    stats = CollectiveStats()
+
+    def scale_for(comp_name: str) -> int:
+        return trips.get(comp_name, 1)
+
+    for comp_name, lines in comps.items():
+        mult = scale_for(comp_name)
+        for line in lines:
+            s = line.strip()
+            m = re.match(r"%?[\w\.\-]+\s*=\s*(\([^=]*?\)|\S+)\s+"
+                         r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                         r"collective-permute)", s)
+            if not m:
+                continue
+            type_str, op = m.group(1), m.group(2)
+            b = _shape_bytes(type_str) * mult
+            stats.bytes_by_op[op] = stats.bytes_by_op.get(op, 0) + b
+            stats.count_by_op[op] = stats.count_by_op.get(op, 0) + mult
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Roofline:
+    """Roofline terms from *per-device* HLO quantities.
+
+    The SPMD HLO module describes one partition, so ``flops`` /
+    ``hbm_bytes`` / ``collective_bytes`` are per-chip; the spec's
+    ``HLO_FLOPs / (chips × peak)`` equals ``flops_per_chip / peak`` for a
+    balanced program, which is what we compute."""
+
+    flops: float                  # per-device HLO FLOPs (trip-count aware)
+    hbm_bytes: float              # per-device HBM traffic estimate
+    collective_bytes: float       # per-device collective bytes moved
+    chips: int
+    model_flops: float = 0.0      # global 6·N·D (2·N·D for inference)
+    dcn_bytes: float = 0.0        # subset of collective bytes crossing pods
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return (self.collective_bytes - self.dcn_bytes) / ICI_BW \
+            + self.dcn_s
+
+    @property
+    def dcn_s(self) -> float:
+        """Inter-pod share at the (much lower) DCN bandwidth."""
+        return self.dcn_bytes / DCN_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_compute_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs (global): catches remat/redundancy."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dcn_bytes": self.dcn_bytes,
+            "dcn_s": self.dcn_s,
+            "dominant": self.dominant,
+            "useful_compute_ratio": self.useful_compute_ratio,
+        }
+
+
+def model_flops(cfg, shape, text_len: Optional[int] = None) -> float:
+    """6·N·D for training, 2·N·D for inference (N = active params)."""
+    n = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * (text_len or shape.seq_len)
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * (text_len or shape.seq_len)
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch      # decode: one token per sequence

@@ -1,0 +1,129 @@
+"""Sharding rule presets + spec builders for the dry-run/launchers.
+
+A *rule table* maps logical axis names (see ``repro.models.layers``) to mesh
+axes.  Presets are the hillclimb's main knob — changing a preset re-lowers
+the same model with a different distribution strategy.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical -> tuple of mesh axes (applied where divisible, else replicated)
+PRESETS: Dict[str, Dict[str, Optional[Tuple[str, ...]]]] = {
+    # 2D "FSDP x TP": weights shard d_model over data AND the wide dim over
+    # model. Required to fit nemotron-340b (DESIGN.md §5). Baseline preset.
+    "fsdp_tp": {
+        "vocab": ("model",), "embed": ("data",), "heads": ("model",),
+        "kv": ("model",), "mlp": ("model",), "expert": ("model",),
+        "layers": None, "batch": ("pod", "data"),
+    },
+    # plain tensor parallel + pure data parallel (params replicated over data)
+    "dp_tp": {
+        "vocab": ("model",), "embed": None, "heads": ("model",),
+        "kv": ("model",), "mlp": ("model",), "expert": ("model",),
+        "layers": None, "batch": ("pod", "data"),
+    },
+    # pure data parallel (the naive paper-faithful mapping: every "client"
+    # replica holds the full model — only viable for small archs)
+    "dp_only": {
+        "vocab": None, "embed": None, "heads": None, "kv": None,
+        "mlp": None, "expert": None, "layers": None,
+        "batch": ("pod", "data", "model"),
+    },
+    # fully-sharded incl. pod axis (ZeRO-3-ish across the whole fleet;
+    # breaks per-pod FL semantics — perf comparison only)
+    "fsdp_all": {
+        "vocab": ("model",), "embed": ("pod", "data"), "heads": ("model",),
+        "kv": ("model",), "mlp": ("model",), "expert": ("model",),
+        "layers": None, "batch": ("pod", "data"),
+    },
+}
+
+
+def resolve(logical: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+            rules: Dict, mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec with divisibility fallback."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        target = rules.get(name) if name else None
+        if not target:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in target if a in sizes and a not in used)
+        total = 1
+        for a in axes:
+            total *= sizes[a]
+        if not axes or total <= 1 or dim % total != 0:
+            parts.append(None)
+            continue
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache logical-axis assignment
+# ---------------------------------------------------------------------------
+
+
+def batch_axes_for(spec_tree):
+    """Logical axes for input-batch leaves by array rank/name convention."""
+
+    def leaf_axes(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "tokens":
+            return ("batch",) + (None,) * (len(leaf.shape) - 1)
+        if name == "frames":
+            return ("batch", None, "embed")[: len(leaf.shape)]
+        if name == "pos":
+            return ()
+        return ("batch",) + (None,) * (len(leaf.shape) - 1)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf_axes, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_axes_for(cache_specs, cfg):
+    """Logical axes for KV-cache/state leaves (matched by leaf name/rank)."""
+
+    def leaf_axes(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        r = len(leaf.shape)
+        if name in ("k", "v"):           # (L, B, len, KV, hd) or enc (L,B,T,H,hd)
+            return (None, "batch", None, "kv", None)[:r]
+        if name == "c":                   # MLA latent (L, B, len, r)
+            return (None, "batch", None, None)[:r]
+        if name == "kr":                  # (L, B, len, rope)
+            return (None, "batch", None, None)[:r]
+        if name == "wkv":                 # (L, B, H, hd, hd)
+            return (None, "batch", "heads", None, None)[:r]
+        if name in ("att_x", "ffn_x"):    # (L, B, D)
+            return (None, "batch", "embed")[:r]
+        if name == "h":                   # (L, B, W)
+            return (None, "batch", "heads")[:r]
+        if name == "conv":                # (L, B, K-1, W)
+            return (None, "batch", None, "heads")[:r]
+        return (None,) * r
+
+    return jax.tree_util.tree_map_with_path(
+        leaf_axes, cache_specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def specs_to_shardings(spec_tree, axes_tree, rules, mesh):
+    """ShapeDtypeStruct tree + logical-axes tree -> NamedSharding tree."""
+    return jax.tree_util.tree_map(
+        lambda s, a: named(mesh, resolve(tuple(a), s.shape, rules, mesh)),
+        spec_tree, axes_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,354 @@
+"""Attention mixers: GQA (with RoPE / sliding window), MLA, cross-attention.
+
+Training/prefill attention is *chunked over query blocks*: each query block
+attends to exactly the key prefix (causal) or band (windowed) it needs, so
+activation memory is O(S·chunk) instead of O(S^2) and windowed attention does
+no out-of-band FLOPs.  Decode attends one query token against a KV cache
+(full or ring-buffer windowed) — see ``kvcache.py``.
+
+MLA (DeepSeek-V2) trains in the naive decompressed form and decodes in the
+*absorbed* form: the cache stores only the compressed latent + shared RoPE
+key, and W_uk / W_uv are folded into the query/output projections.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.models.layers import (
+    ParamDef, apply_rope, ones_init, zeros_init, normal_init,
+)
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ArchConfig, d_in: Optional[int] = None):
+    d = d_in or cfg.d_model
+    hd = cfg.resolved_head_dim
+    defs = {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv", None)),
+        "wv": ParamDef((d, cfg.n_kv_heads, hd), ("embed", "kv", None)),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init=zeros_init)
+        defs["k_norm"] = ParamDef((hd,), (None,), init=zeros_init)
+    return defs
+
+
+def cross_attn_defs(cfg: ArchConfig):
+    # encoder-decoder cross attention (whisper): full MHA, kv from encoder
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    return {
+        "wq": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", None)),
+        "wv": ParamDef((d, cfg.n_heads, hd), ("embed", "heads", None)),
+        "wo": ParamDef((cfg.n_heads, hd, d), ("heads", None, "embed")),
+    }
+
+
+def mla_defs(cfg: ArchConfig):
+    m = cfg.mla
+    d = cfg.d_model
+    H = cfg.n_heads
+    defs = {
+        "w_dkv": ParamDef((d, m.kv_lora_rank), ("embed", None)),
+        "w_kr": ParamDef((d, m.qk_rope_head_dim), ("embed", None)),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), init=zeros_init),
+        "w_uk": ParamDef((m.kv_lora_rank, H, m.qk_nope_head_dim), (None, "heads", None)),
+        "w_uv": ParamDef((m.kv_lora_rank, H, m.v_head_dim), (None, "heads", None)),
+        "w_o": ParamDef((H, m.v_head_dim, d), ("heads", None, "embed")),
+    }
+    if m.q_lora_rank:
+        defs["w_dq"] = ParamDef((d, m.q_lora_rank), ("embed", None))
+        defs["q_norm"] = ParamDef((m.q_lora_rank,), (None,), init=zeros_init)
+        defs["w_uq"] = ParamDef(
+            (m.q_lora_rank, H, m.qk_nope_head_dim + m.qk_rope_head_dim),
+            (None, "heads", None))
+    else:
+        defs["w_q"] = ParamDef(
+            (d, H, m.qk_nope_head_dim + m.qk_rope_head_dim),
+            ("embed", "heads", None))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention primitives
+# ---------------------------------------------------------------------------
+
+
+def _rms_head_norm(x, scale, eps=1e-6):
+    v = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(v + eps)
+            * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _grouped_scores(q, k):
+    """q: (B,Sq,K,G,D); k: (B,Sk,K,D) -> scores (B,K,G,Sq,Sk) fp32."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32)
+
+
+def _grouped_out(probs, v):
+    """probs: (B,K,G,Sq,Sk); v: (B,Sk,K,D) -> (B,Sq,K,G,D)."""
+    return jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+
+
+def _plain_attention(q, k, v, mask):
+    """Full-materialization attention. q:(B,Sq,K,G,D) mask:(Sq,Sk) bool.
+
+    Explicit sharding hints: without them XLA's propagation loses the batch
+    sharding through the chunk slicing inside scan+remat and replicates the
+    score matmuls across the whole mesh (measured: paligemma train_4k ran
+    attention at global batch per chip — EXPERIMENTS.md §Perf pair B)."""
+    import os
+    from repro.models.sharding import hint, resolve_spec
+    # When K·G shards over "model" (most GQA archs) XLA propagation does the
+    # right thing on its own — forcing hints there REGRESSES (glm4 collective
+    # 7.2 -> 23.9 s, §Perf pair B iteration log).  Only the fallback case
+    # (MQA / head counts indivisible by the model axis) needs explicit
+    # sequence-parallel hints: shard the query-sequence dim instead.
+    # REPRO_ATTN_HINTS=0 restores the paper-faithful baseline lowering.
+    # Condition (§Perf pair B, refined on qwen3): XLA can shard attention
+    # whenever K, G, or the joint K·G dim divides the model axis (qwen
+    # K4·G8=32 — forcing seq-parallel there regressed 10.1 -> 55.3 s);
+    # hints only when no head combination is divisible.
+    if os.environ.get("REPRO_ATTN_HINTS", "1") == "0":
+        head_sharded = True
+    else:
+        import jax.sharding as _jsh
+        mesh = _jsh.get_abstract_mesh()
+        n_model = (dict(mesh.shape).get("model", 1)
+                   if mesh is not None and not getattr(mesh, "empty", True)
+                   else 1)
+        K, G = q.shape[2], q.shape[3]
+        head_sharded = (n_model <= 1 or K % n_model == 0
+                        or G % n_model == 0 or (K * G) % n_model == 0)
+    if not head_sharded:
+        k = hint(k, "batch", None, "kv", None)
+        v = hint(v, "batch", None, "kv", None)
+    scores = _grouped_scores(q, k) * (1.0 / math.sqrt(q.shape[-1]))
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if not head_sharded:
+        scores = hint(scores, "batch", "kv", "heads", "qseq", None)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _grouped_out(probs, v)
+
+
+def _causal_mask(sq: int, sk: int, q_offset: int, window: int = 0):
+    # query i (absolute q_offset+i) may see key j iff j <= i and j > i-window
+    qi = jnp.arange(sq)[:, None] + q_offset
+    kj = jnp.arange(sk)[None, :]
+    m = kj <= qi
+    if window:
+        m &= kj > qi - window
+    return m
+
+
+def chunked_causal_attention(q, k, v, *, window: int = 0, q_chunk: int = 1024):
+    """Causal (optionally banded) attention, chunked over query blocks.
+
+    q: (B, S, K, G, D); k, v: (B, S, K, D).  Python-unrolled query blocks so
+    each block's key range is *static*: block i attends keys [lo_i, hi_i)
+    with hi_i = (i+1)*q_chunk and lo_i = max(0, hi_i - q_chunk - window + 1)
+    rounded down to a chunk boundary.  No out-of-band FLOPs for windowed
+    attention; ~2x fewer FLOPs than full-matrix for long causal sequences.
+    """
+    B, S, K, G, D = q.shape
+    if S <= q_chunk:
+        return _plain_attention(q, k, v, _causal_mask(S, S, 0, window))
+    n_blocks = S // q_chunk
+    assert S % q_chunk == 0, (S, q_chunk)
+    outs = []
+    for i in range(n_blocks):
+        q_lo, q_hi = i * q_chunk, (i + 1) * q_chunk
+        if window:
+            k_lo = max(0, (q_lo - window) // q_chunk * q_chunk)
+        else:
+            k_lo = 0
+        k_hi = q_hi
+        qb = q[:, q_lo:q_hi]
+        kb = k[:, k_lo:k_hi]
+        vb = v[:, k_lo:k_hi]
+        mask = _causal_mask(q_chunk, k_hi - k_lo, q_lo - k_lo, window)
+        outs.append(_plain_attention(qb, kb, vb, mask))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# GQA mixer
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(cfg, p, x, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhf->bshf", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dkf->bskf", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkf->bskf", x, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = _rms_head_norm(q, p["q_norm"])
+        k = _rms_head_norm(k, p["k_norm"])
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attention(cfg: ArchConfig, p, x, positions, *, window: int = 0):
+    """Training/prefill self-attention.  x: (B,S,d) -> (B,S,d), plus (k,v)."""
+    from repro.models.sharding import resolve_spec
+    B, S, _ = x.shape
+    K = cfg.n_kv_heads
+    G = cfg.n_heads // K
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    qg = q.reshape(B, S, K, G, q.shape[-1])
+    ctx = chunked_causal_attention(qg, k, v, window=window)
+    ctx = ctx.reshape(B, S, cfg.n_heads, -1)
+    out = jnp.einsum("bshf,hfd->bsd", ctx, p["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def gqa_decode(cfg: ArchConfig, p, x, k_cache, v_cache, cache_mask, positions):
+    """One-token decode. x: (B,1,d); caches: (B,L,K,D); cache_mask: (B,L) bool
+    marking valid cache slots (includes the slot of the current token after
+    update).  Returns (out, k_new, v_new) — cache update is the caller's job
+    (ring-buffer vs linear indexing lives in kvcache.py)."""
+    B = x.shape[0]
+    K = cfg.n_kv_heads
+    G = cfg.n_heads // K
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    qg = q.reshape(B, 1, K, G, q.shape[-1])
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / math.sqrt(q.shape[-1]))
+    scores = jnp.where(cache_mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v_cache.dtype), v_cache)
+    ctx = ctx.reshape(B, 1, cfg.n_heads, -1)
+    out = jnp.einsum("bshf,hfd->bsd", ctx, p["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def gqa_bidirectional(cfg: ArchConfig, p, x, positions):
+    """Bidirectional self-attention (encoder side of enc-dec models)."""
+    B, S, _ = x.shape
+    K = cfg.n_kv_heads
+    G = cfg.n_heads // K
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    qg = q.reshape(B, S, K, G, q.shape[-1])
+    mask = jnp.ones((S, S), dtype=bool)
+    ctx = _plain_attention(qg, k, v, mask)
+    ctx = ctx.reshape(B, S, cfg.n_heads, -1)
+    return jnp.einsum("bshf,hfd->bsd", ctx, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def cross_attention(cfg: ArchConfig, p, x, enc_kv):
+    """x: (B,S,d); enc_kv: (k, v) each (B,T,H,D) precomputed from encoder."""
+    k, v = enc_kv
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhf->bshf", x, p["wq"].astype(dt))
+    scores = jnp.einsum("bshf,bthf->bhst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / math.sqrt(q.shape[-1]))
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhst,bthf->bshf", probs.astype(dt), v)
+    return jnp.einsum("bshf,hfd->bsd", ctx, p["wo"].astype(dt))
+
+
+def encode_cross_kv(cfg: ArchConfig, p, enc_out):
+    dt = enc_out.dtype
+    k = jnp.einsum("btd,dhf->bthf", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("btd,dhf->bthf", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(cfg, p, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    if m.q_lora_rank:
+        from repro.models.layers import rmsnorm
+        cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(dt)), p["q_norm"])
+        q = jnp.einsum("bsr,rhf->bshf", cq, p["w_uq"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhf->bshf", x, p["w_q"].astype(dt))
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(cfg, p, x, positions):
+    from repro.models.layers import rmsnorm
+    m = cfg.mla
+    dt = x.dtype
+    c = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt)), p["kv_norm"])
+    k_rope = jnp.einsum("bsd,df->bsf", x, p["w_kr"].astype(dt))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return c, k_rope
+
+
+def mla_attention(cfg: ArchConfig, p, x, positions, *, window: int = 0):
+    """Training/prefill MLA in decompressed form; returns (out, (c, k_rope))."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    dt = x.dtype
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    c, k_rope = _mla_latent(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhf->bshf", c, p["w_uk"].astype(dt))
+    v = jnp.einsum("bsr,rhf->bshf", c, p["w_uv"].astype(dt))
+    # fold rope part in by concatenation (k_rope shared across heads)
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (B, S, cfg.n_heads, m.qk_rope_head_dim))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    # scale uses the full qk dim (nope+rope), matching DeepSeek-V2
+    qg = q_full.reshape(B, S, cfg.n_heads, 1, q_full.shape[-1])
+    ctx = chunked_causal_attention(qg, k_full, v, window=window)
+    ctx = ctx.reshape(B, S, cfg.n_heads, m.v_head_dim)
+    out = jnp.einsum("bshf,hfd->bsd", ctx, p["w_o"].astype(dt))
+    return out, (c, k_rope)
+
+
+def mla_decode(cfg: ArchConfig, p, x, c_cache, kr_cache, cache_mask, positions):
+    """Absorbed-form decode: cache holds (latent c, shared rope key) only.
+
+    scores = q_nope·(c @ W_uk) + q_rope·k_rope
+           = (q_nope @ W_uk^T)·c + q_rope·k_rope        (absorb W_uk)
+    out    = (probs·c) @ W_uv @ W_o                      (absorb W_uv)
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    dt = x.dtype
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)          # (B,1,H,*)
+    c_new, kr_new = _mla_latent(cfg, p, x, positions)      # (B,1,r), (B,1,f)
+    # absorb W_uk into the query: (B,1,H,r)
+    q_lat = jnp.einsum("bshf,rhf->bshr", q_nope, p["w_uk"].astype(dt))
+    scores = jnp.einsum("bhr,btr->bht", q_lat[:, 0], c_cache,
+                        preferred_element_type=jnp.float32)
+    scores += jnp.einsum("bhf,btf->bht", q_rope[:, 0], kr_cache,
+                         preferred_element_type=jnp.float32)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    scores = jnp.where(cache_mask[:, None, :], scores * scale, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)                # (B,H,L)
+    ctx_lat = jnp.einsum("bht,btr->bhr", probs.astype(dt), c_cache)
+    ctx = jnp.einsum("bhr,rhf->bhf", ctx_lat, p["w_uv"].astype(dt))
+    out = jnp.einsum("bhf,hfd->bd", ctx, p["w_o"].astype(dt))[:, None, :]
+    return out, (c_new, kr_new)

@@ -1,0 +1,64 @@
+"""KV caches and recurrent decode states.
+
+Two attention-cache layouts:
+
+* **linear** — pre-allocated (B, L, KV, D); token at position p writes slot p.
+  Used for ``decode_32k`` (full context kept).
+* **ring** — (B, W, KV, D) ring buffer; token at position p writes slot
+  p mod W.  Used for ``long_500k`` sliding-window decode: O(W) memory at
+  524k positions.  RoPE is applied at *write* time with absolute positions,
+  so slot order never matters.
+
+MLA caches the compressed latent + shared RoPE key instead of per-head K/V
+(DeepSeek-V2's memory saving: (r + rope_dim) vs 2·H·D per token).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+
+
+def attn_cache_defs(cfg: ArchConfig, batch: int, length: int, dtype):
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, length, cfg.n_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, length, cfg.n_kv_heads, hd), dtype),
+    }
+
+
+def mla_cache_defs(cfg: ArchConfig, batch: int, length: int, dtype):
+    m = cfg.mla
+    return {
+        "c": jax.ShapeDtypeStruct((batch, length, m.kv_lora_rank), dtype),
+        "kr": jax.ShapeDtypeStruct((batch, length, m.qk_rope_head_dim), dtype),
+    }
+
+
+def zeros_like_specs(specs):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def write_slot(cache_arr, new, slot):
+    """Write new (B, 1, ...) into cache (B, L, ...) at dynamic slot index."""
+    return jax.lax.dynamic_update_slice_in_dim(cache_arr, new.astype(cache_arr.dtype), slot, axis=1)
+
+
+def cache_slot(pos, length: int, ring: bool):
+    return jax.lax.rem(pos, length) if ring else pos
+
+
+def cache_mask(batch: int, pos, length: int, ring: bool):
+    """(B, L) bool — valid cache slots after writing position ``pos``.
+
+    For a ring buffer every slot is valid once pos+1 >= W; earlier, only the
+    first pos+1 slots.  For linear layout, slots <= pos.
+    """
+    idx = jnp.arange(length)
+    valid = idx <= pos if not ring else idx < jnp.minimum(pos + 1, length)
+    return jnp.broadcast_to(valid[None, :], (batch, length))

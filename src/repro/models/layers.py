@@ -1,0 +1,205 @@
+"""Parameter definition machinery + basic layers.
+
+Models are pure functions over pytrees of arrays.  Each model module builds a
+tree of :class:`ParamDef` (shape, dtype, init, *logical axes*).  From that one
+tree we derive, without drift:
+
+* materialized parameters (``init_params``),
+* ``jax.ShapeDtypeStruct`` stand-ins for the multi-pod dry-run (``abstract_params``),
+* ``PartitionSpec`` trees via logical->mesh axis rules (``partition_specs``).
+
+Logical axis names used across the zoo:
+  "vocab"   — vocabulary dim                (sharded over "model")
+  "embed"   — model/residual dim            (FSDP: sharded over "data")
+  "heads"   — query-head dim                (sharded over "model")
+  "kv"      — kv-head dim                   (sharded over "model" when divisible)
+  "mlp"     — FFN hidden dim                (sharded over "model")
+  "expert"  — MoE expert dim                (expert parallel over "model")
+  "layers"  — stacked scan dim              (never sharded)
+  None      — replicated dim
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# ParamDef
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.float32
+    # init: (key, shape, dtype) -> array
+    init: Callable = None  # default: lecun_normal on last-2 dims
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+jax.tree_util.register_static(ParamDef)
+
+
+def _default_init(key, shape, dtype):
+    if len(shape) <= 1:
+        return jnp.zeros(shape, dtype)
+    fan_in = shape[-2]
+    scale = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def normal_init(stddev: float):
+    return lambda key, shape, dtype: (jax.random.normal(key, shape) * stddev).astype(dtype)
+
+
+def zeros_init(key, shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def constant_init(value: float):
+    return lambda key, shape, dtype: jnp.full(shape, value, dtype)
+
+
+def uniform_init(lo: float, hi: float):
+    return lambda key, shape, dtype: (
+        jax.random.uniform(key, shape, minval=lo, maxval=hi).astype(dtype)
+    )
+
+
+def is_paramdef_leaf(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key) -> Params:
+    """Materialize a ParamDef tree with split keys (deterministic by path)."""
+    leaves, treedef = jax.tree_util.tree_flatten(defs, is_leaf=is_paramdef_leaf)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    arrs = []
+    for k, d in zip(keys, leaves):
+        fn = d.init or _default_init
+        arrs.append(fn(k, d.shape, d.dtype))
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def abstract_params(defs):
+    """ShapeDtypeStruct tree for .lower() without allocation."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype),
+        defs,
+        is_leaf=is_paramdef_leaf,
+    )
+
+
+def partition_specs(defs, rules: Dict[Optional[str], Optional[str]],
+                    mesh_shape: Dict[str, int]):
+    """Map logical axes -> PartitionSpec with divisibility fallback.
+
+    ``rules`` maps logical axis name -> mesh axis name (or None / tuple of
+    mesh axes).  A mapping is dropped (replicated) when the dim is not
+    divisible by the product of the mapped mesh axis sizes, so e.g. kv=1
+    heads simply replicate instead of failing to lower.
+    """
+
+    def spec_for(d: ParamDef):
+        parts = []
+        used = set()
+        for dim, ax in zip(d.shape, d.axes):
+            mesh_ax = rules.get(ax)
+            if mesh_ax is None:
+                parts.append(None)
+                continue
+            axes_tuple = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+            axes_tuple = tuple(a for a in axes_tuple if a not in used)
+            size = 1
+            for a in axes_tuple:
+                size *= mesh_shape.get(a, 1)
+            if size <= 1 or dim % size != 0:
+                parts.append(None)
+                continue
+            used.update(axes_tuple)
+            parts.append(mesh_ax if isinstance(mesh_ax, tuple) else mesh_ax)
+        # trailing Nones can be dropped but keep explicit for clarity
+        return P(*parts)
+
+    return jax.tree_util.tree_map(spec_for, defs, is_leaf=is_paramdef_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Basic ops (pure functions over param subtrees)
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def norm_defs(cfg, name: str = "norm"):
+    if cfg.norm == "rmsnorm":
+        return {"scale": ParamDef((cfg.d_model,), ("embed",), init=zeros_init)}
+    return {
+        "scale": ParamDef((cfg.d_model,), ("embed",), init=ones_init),
+        "bias": ParamDef((cfg.d_model,), ("embed",), init=zeros_init),
+    }
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"])
+    return layernorm(x, p["scale"], p["bias"])
+
+
+def dense(x, w, compute_dtype=None):
+    """x @ w with bf16 compute, fp32 params."""
+    dt = compute_dtype or x.dtype
+    return jnp.einsum("...d,df->...f", x.astype(dt), w.astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (d/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    angles = angles[..., None, :]  # (..., S, 1, d/2) broadcast over heads
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,47 @@
+"""Feed-forward blocks: SwiGLU / GeGLU / GELU / squared-ReLU / RWKV channel-mix."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.models.layers import ParamDef
+
+GATED_ACTS = ("swiglu", "geglu", "relu_sq_gate")
+
+
+def mlp_defs(cfg: ArchConfig, d_ff: int = 0):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    defs = {"w_down": ParamDef((ff, d), ("mlp", "embed"))}
+    if cfg.act in GATED_ACTS:
+        defs["w_gate"] = ParamDef((d, ff), ("embed", "mlp"))
+        defs["w_up"] = ParamDef((d, ff), ("embed", "mlp"))
+    else:
+        defs["w_up"] = ParamDef((d, ff), ("embed", "mlp"))
+    return defs
+
+
+def _act(name: str, gate, up):
+    if name == "swiglu":
+        return jax.nn.silu(gate) * up
+    if name == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if name == "relu_sq_gate":
+        # RWKV channel-mix: squared-ReLU key path, sigmoid receptance gate
+        return jnp.square(jax.nn.relu(up)) * jax.nn.sigmoid(gate)
+    if name == "gelu":
+        return jax.nn.gelu(up, approximate=True)
+    if name == "sq_relu":
+        return jnp.square(jax.nn.relu(up))
+    raise ValueError(f"unknown activation {name}")
+
+
+def mlp(cfg: ArchConfig, p, x):
+    dt = x.dtype
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    gate = None
+    if cfg.act in GATED_ACTS:
+        gate = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    h = _act(cfg.act, gate, up)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt))

@@ -1,0 +1,162 @@
+"""Model facade: ties ArchConfig -> parameter defs, steps, and input specs.
+
+This is the layer both the FL platform (small models, many clients) and the
+launcher (assigned LLM architectures, multi-pod meshes) program against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.configs.shapes import InputShape
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    abstract_params, init_params, partition_specs,
+)
+from repro.optim import Optimizer, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ---- parameters -------------------------------------------------
+    def defs(self):
+        return tfm.model_defs(self.cfg)
+
+    def init(self, key) -> Dict[str, Any]:
+        return init_params(self.defs(), key)
+
+    def abstract(self):
+        return abstract_params(self.defs())
+
+    def pspecs(self, rules, mesh_shape):
+        return partition_specs(self.defs(), rules, mesh_shape)
+
+    # ---- compute ----------------------------------------------------
+    def forward(self, params, tokens, frames=None, remat=False):
+        return tfm.forward(self.cfg, params, tokens, frames=frames,
+                           remat=remat)
+
+    def loss(self, params, batch, remat=True):
+        return tfm.loss_fn(self.cfg, params, batch, remat=remat)
+
+    def decode_step(self, params, cache, tokens, pos, ring=False):
+        return tfm.decode_step(self.cfg, params, cache, tokens, pos, ring=ring)
+
+    def init_cache(self, batch, length, ring=False):
+        return tfm.init_cache(self.cfg, batch, length, ring)
+
+    def cache_specs(self, batch, length, ring=False):
+        return tfm.cache_specs(self.cfg, batch, length, ring)
+
+    # ---- input specs for the dry-run ---------------------------------
+    def text_len(self, shape: InputShape) -> int:
+        # VLM: patch stubs occupy part of the global sequence budget
+        if self.cfg.family == "vlm" and shape.kind != "decode":
+            return max(shape.seq_len - self.cfg.n_frames, 16)
+        return shape.seq_len
+
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+        cfg = self.cfg
+        B = shape.global_batch
+        dt = jnp.dtype(cfg.dtype)
+        if shape.kind in ("train", "prefill"):
+            S = self.text_len(shape)
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+            if cfg.family in ("vlm", "audio"):
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.n_frames, cfg.d_model), dt)
+            return specs
+        # decode: one new token + cache of seq_len capacity
+        ring = shape.seq_len > 65_536  # long-context uses windowed cache
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+            "cache": self.cache_specs(B, shape.seq_len, ring=ring),
+        }
+
+    def make_inputs(self, shape: InputShape, key) -> Dict[str, Any]:
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape)
+        out: Dict[str, Any] = {}
+        if "tokens" in specs:
+            key, k1 = jax.random.split(key)
+            out["tokens"] = jax.random.randint(
+                k1, specs["tokens"].shape, 0, self.cfg.vocab, jnp.int32)
+        if "frames" in specs:
+            key, k2 = jax.random.split(key)
+            out["frames"] = jax.random.normal(
+                k2, specs["frames"].shape, specs["frames"].dtype)
+        if "cache" in specs:
+            out["cache"] = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), specs["cache"],
+                is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+            out["pos"] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: Any
+
+
+def train_state_flatten(ts):
+    return (ts.params, ts.opt_state, ts.step), None
+
+
+def train_state_unflatten(_, children):
+    return TrainState(*children)
+
+
+jax.tree_util.register_pytree_node(TrainState, train_state_flatten,
+                                   train_state_unflatten)
+
+
+def make_train_step(model: Model, optimizer: Optimizer, remat: bool = True):
+    """(state, batch) -> (state, metrics). Pure; jit/pjit by the caller."""
+
+    def step(state: TrainState, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch, remat=remat), has_aux=True
+        )(state.params)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(params, opt_state, state.step + 1)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return step
+
+
+def make_prefill_step(model: Model):
+    def step(params, batch):
+        logits, _ = model.forward(params, batch["tokens"],
+                                  frames=batch.get("frames"), remat=False)
+        return logits
+    return step
+
+
+def make_serve_step(model: Model, ring: bool = False):
+    def step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, ring=ring)
+    return step
+
+
+def init_train_state(model: Model, optimizer: Optimizer, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))

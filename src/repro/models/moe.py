@@ -1,0 +1,279 @@
+"""Mixture-of-Experts FFN with sort-based (dropping) dispatch.
+
+TPU adaptation notes (DESIGN.md §2): instead of the GShard one-hot dispatch
+einsum — whose (tokens x experts x capacity) tensor is infeasible at 128
+experts — tokens are *sorted by destination expert* and scattered into a
+dense (E, C, d) buffer, so the expert computation is one batched einsum whose
+expert dim shards over the mesh "model" axis (expert parallelism).  XLA SPMD
+turns the scatter/gather around the sharded buffer into the all-to-all of a
+classic MoE dispatch.  Over-capacity tokens are dropped (their residual
+stream passes through), matching capacity-factor semantics of Switch/GShard.
+
+Router: softmax -> top-k -> renormalized combine weights (DeepSeek-V2 /
+Qwen3 convention); load-balance auxiliary loss per Switch Transformer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.models.layers import ParamDef, normal_init
+from repro.models.mlp import GATED_ACTS, _act, mlp_defs, mlp
+from repro.models.sharding import hint
+
+
+def moe_defs(cfg: ArchConfig):
+    m = cfg.moe
+    d = cfg.d_model
+    de = m.d_expert or cfg.d_ff
+    defs = {
+        "router": ParamDef((d, m.n_experts), ("embed", None),
+                           init=normal_init(0.02)),
+        "w_up": ParamDef((m.n_experts, d, de), ("expert", "embed", "mlp")),
+        "w_down": ParamDef((m.n_experts, de, d), ("expert", "mlp", "embed")),
+    }
+    if cfg.act in GATED_ACTS:
+        defs["w_gate"] = ParamDef((m.n_experts, d, de), ("expert", "embed", "mlp"))
+    if m.n_shared:
+        # shared experts fused into one wide FFN (equivalent compute)
+        defs["shared"] = mlp_defs(cfg, d_ff=m.n_shared * de)
+    return defs
+
+
+def _router(cfg: ArchConfig, p, x_flat):
+    """x_flat: (T, d) -> top-k (weights, ids), probs for aux loss."""
+    m = cfg.moe
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_ids = jax.lax.top_k(probs, m.top_k)            # (T, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+    return top_w, top_ids, probs
+
+
+def load_balance_loss(cfg: ArchConfig, probs, top_ids):
+    """Switch-style auxiliary loss: E * sum_e f_e * P_e."""
+    m = cfg.moe
+    T = probs.shape[0]
+    onehot = jax.nn.one_hot(top_ids, m.n_experts, dtype=jnp.float32)  # (T,k,E)
+    f = onehot.sum(axis=(0, 1)) / (T * m.top_k)   # dispatch fraction per expert
+    P_e = probs.mean(axis=0)
+    return m.n_experts * jnp.sum(f * P_e)
+
+
+def capacity(cfg: ArchConfig, n_tokens: int, factor: float = 1.25) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k * factor / m.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to multiple of 8
+
+
+def _dispatch_local(cfg: ArchConfig, x_flat, top_w, top_ids, C: int):
+    """Sort-based dispatch of (T, d) tokens into an (E, C, d) buffer.
+    Returns (buf, combine_meta) where combine_meta re-scatters outputs."""
+    m = cfg.moe
+    T, d = x_flat.shape
+    k, E = m.top_k, m.n_experts
+    dt = x_flat.dtype
+    flat_e = top_ids.reshape(T * k)
+    flat_t = jnp.repeat(jnp.arange(T), k)
+    flat_w = top_w.reshape(T * k).astype(dt)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e, sorted_t, sorted_w = flat_e[order], flat_t[order], flat_w[order]
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)
+    buf = jnp.zeros((E, C + 1, d), dt)
+    buf = buf.at[sorted_e, pos_c].set(x_flat[sorted_t])[:, :C]
+    return buf, (sorted_e, sorted_t, sorted_w, pos_c, keep)
+
+
+def _combine_local(meta, out_buf, T: int):
+    sorted_e, sorted_t, sorted_w, pos_c, keep = meta
+    E, C, d = out_buf.shape
+    dt = out_buf.dtype
+    gathered = out_buf[sorted_e, jnp.minimum(pos_c, C - 1)]
+    gathered = gathered * (sorted_w * keep.astype(dt))[:, None]
+    return jnp.zeros((T, d), dt).at[sorted_t].add(gathered)
+
+
+def moe_ffn_expert_parallel(cfg: ArchConfig, p, x,
+                            capacity_factor: float = 1.25):
+    """Expert-parallel MoE via shard_map (hillclimb replacement for the
+    global dispatch — see EXPERIMENTS.md §Perf pair A).
+
+    Tokens are additionally split across the mesh "model" axis; each device
+    routes its T/(data·model) tokens locally, the dispatch buffer does ONE
+    all-to-all over "model" (experts live E/n_model per device), and the
+    combined outputs are re-gathered.  Collective bytes per layer drop from
+    O(all tokens all-gathered per expert-shard) to
+    O(tokens·top_k/E·capacity) moved point-to-point."""
+    import jax.sharding as jsh
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jsh.get_abstract_mesh()
+    if mesh is None or getattr(mesh, "empty", True) or \
+            "model" not in mesh.axis_names:
+        return moe_ffn(cfg, p, x, capacity_factor)
+    sizes = dict(mesh.shape)
+    n_model = sizes.get("model", 1)
+    m = cfg.moe
+    if n_model <= 1 or m.n_experts % n_model:
+        return moe_ffn(cfg, p, x, capacity_factor)
+
+    # all mesh axes manual: XLA's CPU AllReducePromotion pass crashes on
+    # partial-auto shard_map modules (pod as auto axis); pod/data both just
+    # partition the batch dim here, so full-manual is semantically identical
+    manual = tuple(a for a in ("pod", "data", "model")
+                   if a in mesh.axis_names)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+
+    def body(x_loc, router_w, *expert_ws):
+        if cfg.act in GATED_ACTS:
+            wu, wg, wd = expert_ws       # each (E_loc, d, de)
+        else:
+            wu, wd = expert_ws
+            wg = None
+        B_loc = x_loc.shape[0]
+        T_loc = B_loc * S
+        xf = x_loc.reshape(T_loc, d)
+        midx = jax.lax.axis_index("model")
+        T_my = -(-T_loc // n_model)               # ceil; pad if needed
+        pad = T_my * n_model - T_loc
+        if pad:
+            xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        x_my = jax.lax.dynamic_slice_in_dim(xf, midx * T_my, T_my, 0)
+
+        logits = jnp.einsum("td,de->te", x_my.astype(jnp.float32),
+                            router_w.astype(jnp.float32))
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_w, top_ids = jax.lax.top_k(probs, k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+        aux = load_balance_loss(cfg, probs, top_ids)
+        aux = jax.lax.pmean(aux, manual)
+
+        C_my = max(8, -(-int(math.ceil(T_my * k * capacity_factor / E)) // 8)
+                   * 8)
+        buf, meta = _dispatch_local(cfg, x_my, top_w, top_ids, C_my)
+        # (E, C_my, d) -> (E_loc, C_my * n_model, d): the expert all-to-all
+        buf = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                 tiled=True)
+        dt = x_loc.dtype
+        up = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dt))
+        gate = None
+        if wg is not None:
+            gate = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dt))
+        h = _act(cfg.act, gate, up)
+        out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(dt))
+        out_buf = jax.lax.all_to_all(out_buf, "model", split_axis=1,
+                                     concat_axis=0, tiled=True)
+        y_my = _combine_local(meta, out_buf, T_my)
+        y = jax.lax.all_gather(y_my, "model", axis=0, tiled=True)
+        if pad:
+            y = y[:T_loc]
+        return y.reshape(B_loc, S, d), aux
+
+    data_part = (batch_axes if len(batch_axes) > 1
+                 else (batch_axes[0] if batch_axes else None))
+    if batch_axes:
+        total = 1
+        for a in batch_axes:
+            total *= sizes[a]
+        if B % total:
+            data_part = None          # tiny decode batches: replicate
+    in_specs = [P(data_part, None, None), P(None, None)]
+    expert_args = [p["w_up"]]
+    if cfg.act in GATED_ACTS:
+        expert_args = [p["w_up"], p["w_gate"], p["w_down"]]
+    else:
+        expert_args = [p["w_up"], p["w_down"]]
+    in_specs += [P("model", None, None)] * len(expert_args)
+    out, aux = jax.shard_map(
+        body, mesh=mesh, in_specs=tuple(in_specs),
+        out_specs=(P(data_part, None, None), P()),
+        axis_names=set(manual), check_vma=False,
+    )(x, p["router"], *expert_args)
+
+    if m.n_shared:
+        out = out + mlp(cfg, p["shared"], x)
+    return out, aux
+
+
+# impl switch: "global" (baseline) | "expert_parallel" (hillclimbed)
+import os as _os
+_IMPL = _os.environ.get("REPRO_MOE_IMPL", "global")
+
+
+def set_moe_impl(name: str) -> None:
+    global _IMPL
+    assert name in ("global", "expert_parallel"), name
+    _IMPL = name
+
+
+def moe_apply(cfg: ArchConfig, p, x, capacity_factor: float = 1.25):
+    if _IMPL == "expert_parallel":
+        return moe_ffn_expert_parallel(cfg, p, x, capacity_factor)
+    return moe_ffn(cfg, p, x, capacity_factor)
+
+
+def moe_ffn(cfg: ArchConfig, p, x, capacity_factor: float = 1.25):
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    dt = x.dtype
+    x_flat = x.reshape(T, d)
+    top_w, top_ids, probs = _router(cfg, p, x_flat)
+    aux = load_balance_loss(cfg, probs, top_ids)
+
+    k = m.top_k
+    E = m.n_experts
+    C = capacity(cfg, T, capacity_factor)
+
+    flat_e = top_ids.reshape(T * k)                       # destination expert
+    flat_t = jnp.repeat(jnp.arange(T), k)                 # source token
+    flat_w = top_w.reshape(T * k).astype(dt)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    sorted_t = flat_t[order]
+    sorted_w = flat_w[order]
+
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(T * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                       # dropped -> slot C
+
+    # dispatch: (E, C+1, d); slot C is the spill bucket, sliced off
+    buf = jnp.zeros((E, C + 1, d), dt)
+    buf = buf.at[sorted_e, pos_c].set(x_flat[sorted_t])
+    buf = buf[:, :C]
+    buf = hint(buf, "expert", None, None)
+
+    # expert FFN as batched einsums, expert dim sharded over "model"
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    gate = None
+    if cfg.act in GATED_ACTS:
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt))
+    h = _act(cfg.act, gate, up)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(dt))
+    out_buf = hint(out_buf, "expert", None, None)
+
+    # combine: gather expert outputs back, weight, scatter-add per token
+    gathered = out_buf[sorted_e, jnp.minimum(pos_c, C - 1)]
+    gathered = gathered * (sorted_w * keep.astype(dt))[:, None]
+    out = jnp.zeros((T, d), dt).at[sorted_t].add(gathered)
+
+    if m.n_shared:
+        out = out + mlp(cfg, p["shared"], x).reshape(T, d)
+    return out.reshape(B, S, d), aux

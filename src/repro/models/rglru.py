@@ -1,0 +1,123 @@
+"""RG-LRU recurrent block (Griffin, arXiv:2402.19427; RecurrentGemma).
+
+Block structure per Griffin Fig. 2:
+    x -> [linear -> causal depthwise conv1d(4) -> RG-LRU] ⊙ [linear -> GeLU] -> linear
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(gate_r(ξ_t));  i_t = sigmoid(gate_i(ξ_t))
+    a_t = exp(-c * softplus(Λ) * r_t)            (c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t^2) ⊙ (i_t ⊙ ξ_t)
+
+Training evaluates the linear recurrence with ``jax.lax.associative_scan``
+(log-depth on TPU); decode is the O(1) per-step update.
+
+Adaptation note (DESIGN.md §2): Griffin's input/recurrence gates are
+block-diagonal linear maps; we use per-channel (diagonal) gates — same
+recurrence family and state size, fewer gate parameters, and the published
+lru_width/d_model are preserved.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.models.layers import ParamDef, normal_init, zeros_init
+
+RGLRU_C = 8.0
+
+
+def rglru_defs(cfg: ArchConfig):
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    K = cfg.conv1d_width
+    return {
+        "w_x": ParamDef((D, W), ("embed", "heads")),
+        "w_gate": ParamDef((D, W), ("embed", "heads")),
+        "conv_w": ParamDef((K, W), (None, "heads"), init=normal_init(0.1)),
+        "conv_b": ParamDef((W,), ("heads",), init=zeros_init),
+        # diagonal RG-LRU gates
+        "gate_r_w": ParamDef((W,), ("heads",), init=normal_init(0.1)),
+        "gate_r_b": ParamDef((W,), ("heads",), init=zeros_init),
+        "gate_i_w": ParamDef((W,), ("heads",), init=normal_init(0.1)),
+        "gate_i_b": ParamDef((W,), ("heads",), init=zeros_init),
+        # Λ parameterizes the stable decay a = exp(-c softplus(Λ) r)
+        "lam": ParamDef((W,), ("heads",), init=_lambda_init),
+        "w_out": ParamDef((W, D), ("heads", "embed")),
+    }
+
+
+def _lambda_init(key, shape, dtype):
+    # init so that a^c = exp(-8 softplus(Λ)) spreads decays in (0.9, 0.999)
+    u = jax.random.uniform(key, shape, minval=0.9, maxval=0.999)
+    # softplus(Λ) = -log(a)/c  =>  Λ = log(expm1(-log(a)/c))
+    sp = -jnp.log(u) / RGLRU_C
+    return jnp.log(jnp.expm1(sp)).astype(dtype)
+
+
+def _causal_conv(x, conv_w, conv_b, conv_state):
+    """Depthwise causal conv1d. x: (B,S,W); conv_state: (B,K-1,W)."""
+    K = conv_w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)  # (B,S+K-1,W)
+    out = sum(xp[:, i : i + x.shape[1]] * conv_w[i].astype(x.dtype)
+              for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else conv_state
+    return out + conv_b.astype(x.dtype), new_state
+
+
+def _gates(p, xi):
+    f32 = jnp.float32
+    x = xi.astype(f32)
+    r = jax.nn.sigmoid(x * p["gate_r_w"].astype(f32) + p["gate_r_b"].astype(f32))
+    i = jax.nn.sigmoid(x * p["gate_i_w"].astype(f32) + p["gate_i_b"].astype(f32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(f32)) * r
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) computed stably via log: 0.5*log1p(-exp(2 log_a))
+    mult = jnp.exp(0.5 * jnp.log1p(-jnp.exp(jnp.minimum(2.0 * log_a, -1e-6))))
+    b = mult * i * x
+    return a, b
+
+
+def rglru_block(cfg: ArchConfig, p, x, state):
+    """x: (B,S,D); state: {"h": (B,W), "conv": (B,K-1,W)} -> (out, state')."""
+    dt = x.dtype
+    xi = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)),
+                       approximate=True)
+    xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], state["conv"])
+    a, b = _gates(p, xi)
+
+    # h_t = a_t h_{t-1} + b_t  via associative scan; fold in h0 afterwards
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    A, B = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = A * state["h"].astype(jnp.float32)[:, None, :] + B
+    new_state = {"h": h[:, -1, :], "conv": conv_state}
+    out = (h.astype(dt) * gate)
+    return jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(dt)), new_state
+
+
+def rglru_decode(cfg: ArchConfig, p, x, state):
+    """One-token decode. x: (B,1,D)."""
+    dt = x.dtype
+    xi = jnp.einsum("bsd,dw->bsw", x, p["w_x"].astype(dt))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"].astype(dt)),
+                       approximate=True)
+    xi, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], state["conv"])
+    a, b = _gates(p, xi)
+    h = a[:, 0] * state["h"].astype(jnp.float32) + b[:, 0]
+    out = (h[:, None, :].astype(dt) * gate)
+    out = jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(dt))
+    return out, {"h": h, "conv": conv_state}
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    W = cfg.lru_width or cfg.d_model
+    K = cfg.conv1d_width
+    return {
+        "h": jnp.zeros((batch, W), jnp.float32),
+        "conv": jnp.zeros((batch, K - 1, W), dtype),
+    }

@@ -1,0 +1,242 @@
+"""RWKV-6 "Finch" layer (arXiv:2404.05892): attention-free time-mix with
+data-dependent decay + token-shift channel-mix.
+
+Recurrence per head (key dim i, value dim j):
+    y_t[j]     = sum_i r_t[i] * (S_t[i,j] + u[i] * k_t[i] * v_t[j])
+    S_{t+1}    = diag(w_t) S_t + k_t v_t^T
+with per-channel, *data-dependent* decay w_t = exp(-exp(w0 + lora(x_t))).
+
+Training uses a chunked formulation (lax.scan over chunks of CHUNK tokens):
+cross-chunk terms go through the carried state S; intra-chunk terms are
+computed with *log-space pairwise exponent differences*
+``exp(cw[t-1] - cw[s])`` which are always <= 0 for s < t, so the chunked
+path is numerically exact — no decay clamping needed (the classic
+``exp(-cw_s)`` overflow of the matmul formulation is avoided; the Pallas
+kernel in ``repro.kernels.rwkv6_scan`` implements the rescaled matmul form).
+
+Decode is the O(1) recurrence — this is why rwkv6 runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.models.layers import ParamDef, normal_init, ones_init, uniform_init, zeros_init
+
+CHUNK = 64
+DECAY_LORA = 64
+
+
+def rwkv_defs(cfg: ArchConfig):
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    ff = cfg.d_ff
+    return {
+        "time": {
+            # static token-shift lerp coefficients for r,k,v,g,w
+            "mu": ParamDef((5, D), (None, "embed"),
+                           init=uniform_init(0.0, 1.0)),
+            # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+            "w0": ParamDef((D,), ("embed",), init=constant_like_decay),
+            "wA": ParamDef((D, DECAY_LORA), ("embed", None),
+                           init=normal_init(0.01)),
+            "wB": ParamDef((DECAY_LORA, D), (None, "embed"),
+                           init=normal_init(0.01)),
+            "wr": ParamDef((D, D), ("embed", "heads")),
+            "wk": ParamDef((D, D), ("embed", "heads")),
+            "wv": ParamDef((D, D), ("embed", "heads")),
+            "wg": ParamDef((D, D), ("embed", "heads")),
+            "wo": ParamDef((D, D), ("heads", "embed")),
+            "u": ParamDef((H, hd), ("heads", None), init=normal_init(0.3)),
+            # per-head group-norm on the wkv output
+            "ln_scale": ParamDef((D,), ("embed",), init=ones_init),
+            "ln_bias": ParamDef((D,), ("embed",), init=zeros_init),
+        },
+        "channel": {
+            "mu_k": ParamDef((D,), ("embed",), init=uniform_init(0.0, 1.0)),
+            "mu_r": ParamDef((D,), ("embed",), init=uniform_init(0.0, 1.0)),
+            "wk": ParamDef((D, ff), ("embed", "mlp")),
+            "wv": ParamDef((ff, D), ("mlp", "embed")),
+            "wr": ParamDef((D, D), ("embed", "heads")),
+        },
+    }
+
+
+def constant_like_decay(key, shape, dtype):
+    # w0 ~ log(decay rate); exp(-exp(-0.6)) ~ 0.58 initial decay
+    return jnp.full(shape, -0.6, dtype)
+
+
+def _shift(x, x_prev):
+    """Token shift: value of the previous token; x: (B,S,D), x_prev: (B,D)."""
+    return jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _ddlerp(x, shifted, mu):
+    return x + (shifted - x) * mu.astype(x.dtype)
+
+
+def _group_norm(x, scale, bias, H, eps=1e-5):
+    """Per-head layernorm on (B,S,D) viewed as (B,S,H,hd)."""
+    B, S, D = x.shape
+    xh = x.reshape(B, S, H, D // H).astype(jnp.float32)
+    mu = xh.mean(-1, keepdims=True)
+    var = xh.var(-1, keepdims=True)
+    xh = (xh - mu) * jax.lax.rsqrt(var + eps)
+    out = xh.reshape(B, S, D) * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out
+
+
+def decay_logw(p, xw):
+    """Per-step log decay (negative): -exp(w0 + tanh(x A) B)."""
+    dt = jnp.float32
+    lora = jnp.einsum("...d,dr->...r", jnp.tanh(
+        jnp.einsum("...d,dr->...r", xw.astype(dt), p["wA"].astype(dt))
+    ), p["wB"].astype(dt))
+    return -jnp.exp(jnp.clip(p["w0"].astype(dt) + lora, -8.0, 6.0))
+
+
+def wkv6_chunked(r, k, v, logw, u, s0):
+    """Chunked WKV6 recurrence.
+
+    r,k,v,logw: (B, T, H, hd) fp32; u: (H, hd); s0: (B, H, hd, hd).
+    Returns y (B,T,H,hd), sT.
+    T must be a multiple of CHUNK (callers pad).
+    """
+    B, T, H, hd = r.shape
+    n = T // CHUNK
+    rc = r.reshape(B, n, CHUNK, H, hd).transpose(1, 0, 3, 2, 4)   # (n,B,H,L,hd)
+    kc = k.reshape(B, n, CHUNK, H, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n, CHUNK, H, hd).transpose(1, 0, 3, 2, 4)
+    wc = logw.reshape(B, n, CHUNK, H, hd).transpose(1, 0, 3, 2, 4)
+
+    L = CHUNK
+    tri_strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+
+    def step(S, inputs):
+        rb, kb, vb, wb = inputs                     # (B,H,L,hd)
+        cw = jnp.cumsum(wb, axis=2)                 # inclusive cumsum of logw
+        cw_excl = cw - wb                           # cw[t-1] (exclusive)
+        # cross-chunk: y_inter[t] = (r_t * exp(cw_excl_t)) @ S
+        q_dec = rb * jnp.exp(cw_excl)
+        y_inter = jnp.einsum("bhti,bhij->bhtj", q_dec, S)
+        # intra-chunk, exact log-space pairwise: exp(cw_excl[t] - cw[s]) <= 1
+        diff = cw_excl[:, :, :, None, :] - cw[:, :, None, :, :]   # (B,H,L,L,hd)
+        gate = jnp.exp(jnp.where(tri_strict[None, None, :, :, None], diff, -jnp.inf))
+        scores = jnp.einsum("bhti,bhtsi->bhts", rb, gate * kb[:, :, None, :, :])
+        y_intra = jnp.einsum("bhts,bhsj->bhtj", scores, vb)
+        # diagonal "bonus" term
+        y_diag = jnp.einsum("bhti,bhti->bht", rb, u[None, :, None, :] * kb)[..., None] * vb
+        # state to chunk end: S' = exp(cw_L) * S + sum_s exp(cw_L - cw_s) k_s v_s^T
+        decay_all = jnp.exp(cw[:, :, -1:, :])                      # (B,H,1,hd)
+        k_dec = kb * jnp.exp(cw[:, :, -1:, :] - cw)                # <=1 safe
+        S_new = decay_all.squeeze(2)[..., None] * S + jnp.einsum(
+            "bhsi,bhsj->bhij", k_dec, vb)
+        return S_new, y_inter + y_intra + y_diag
+
+    sT, ys = jax.lax.scan(step, s0, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, T, H, hd)
+    return y, sT
+
+
+def time_mix(cfg: ArchConfig, p, x, x_prev, s0, use_kernel: bool = False):
+    """RWKV6 attention replacement. x: (B,S,D). Returns (out, x_last, sT)."""
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    B, S, _ = x.shape
+    dt = x.dtype
+    shifted = _shift(x, x_prev)
+    mu = p["mu"]
+    xr = _ddlerp(x, shifted, mu[0])
+    xk = _ddlerp(x, shifted, mu[1])
+    xv = _ddlerp(x, shifted, mu[2])
+    xg = _ddlerp(x, shifted, mu[3])
+    xw = _ddlerp(x, shifted, mu[4])
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt)).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt)).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt)))
+    logw = decay_logw(p, xw).reshape(B, S, H, hd)
+
+    f32 = jnp.float32
+    recurrence = wkv6_chunked
+    if use_kernel:
+        from repro.kernels import ops as kops
+        recurrence = kops.wkv6
+    pad = (-S) % CHUNK
+    if pad:
+        padfn = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r_, k_, v_, w_ = map(padfn, (r.astype(f32), k.astype(f32),
+                                     v.astype(f32), logw))
+        # padded steps: w=0 (no decay), k=0 (no contribution)
+        y, sT = recurrence(r_, k_, v_, w_, p["u"].astype(f32), s0)
+        y = y[:, :S]
+    else:
+        y, sT = recurrence(r.astype(f32), k.astype(f32), v.astype(f32),
+                           logw, p["u"].astype(f32), s0)
+
+    y = _group_norm(y.reshape(B, S, D), p["ln_scale"], p["ln_bias"], H)
+    out = (y.astype(dt) * g)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"].astype(dt))
+    return out, x[:, -1, :], sT
+
+
+def time_mix_decode(cfg: ArchConfig, p, x, x_prev, S0):
+    """One-token decode. x: (B,1,D); S0: (B,H,hd,hd)."""
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    B = x.shape[0]
+    dt = x.dtype
+    shifted = x_prev[:, None, :]
+    mu = p["mu"]
+    xr = _ddlerp(x, shifted, mu[0])[:, 0]
+    xk = _ddlerp(x, shifted, mu[1])[:, 0]
+    xv = _ddlerp(x, shifted, mu[2])[:, 0]
+    xg = _ddlerp(x, shifted, mu[3])[:, 0]
+    xw = _ddlerp(x, shifted, mu[4])[:, 0]
+
+    f32 = jnp.float32
+    r = (xr @ p["wr"].astype(dt)).reshape(B, H, hd).astype(f32)
+    k = (xk @ p["wk"].astype(dt)).reshape(B, H, hd).astype(f32)
+    v = (xv @ p["wv"].astype(dt)).reshape(B, H, hd).astype(f32)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    w = jnp.exp(decay_logw(p, xw).reshape(B, H, hd))
+    u = p["u"].astype(f32)
+
+    kv = jnp.einsum("bhi,bhj->bhij", k, v)
+    y = jnp.einsum("bhi,bhij->bhj", r, S0 + u[None, :, :, None] * kv)
+    S_new = w[..., None] * S0 + kv
+    y = _group_norm(y.reshape(B, 1, D), p["ln_scale"], p["ln_bias"], H)
+    out = (y.astype(dt) * g[:, None, :])
+    out = jnp.einsum("bsd,de->bse", out, p["wo"].astype(dt))
+    return out, x[:, 0, :], S_new
+
+
+def channel_mix(cfg: ArchConfig, p, x, x_prev):
+    """RWKV channel-mix with token shift. Returns (out, x_last)."""
+    dt = x.dtype
+    shifted = _shift(x, x_prev)
+    xk = _ddlerp(x, shifted, p["mu_k"])
+    xr = _ddlerp(x, shifted, p["mu_r"])
+    kk = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)))
+    return rr * jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(dt)), x[:, -1, :]
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    """Per-layer decode/train-carry state."""
+    D = cfg.d_model
+    H = D // cfg.rwkv_head_dim
+    hd = cfg.rwkv_head_dim
+    return {
+        "att_x": jnp.zeros((batch, D), dtype),
+        "ffn_x": jnp.zeros((batch, D), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

@@ -1,0 +1,106 @@
+"""Sharding hints that degrade gracefully outside a mesh context.
+
+Models call ``hint(x, "batch", None, "model")`` with *logical* axis names;
+under an ambient mesh (``jax.sharding.use_mesh`` / ``with mesh:``) this turns
+into ``with_sharding_constraint``; with no mesh (CPU unit tests) it is a
+no-op.  Logical axes are resolved through the active rule table so the same
+model code serves the single-pod ("data","model") and multi-pod
+("pod","data","model") meshes: "batch" -> ("pod","data") when a pod axis
+exists, else ("data",).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_state = threading.local()
+
+# logical -> mesh axis (or tuple); None = replicate
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "expert_cap": None,
+    "frames": None,
+    # sequence-parallel attention fallback: used for the query-sequence dim
+    # when an arch's head counts cannot shard over "model" (MQA, odd heads)
+    "qseq": ("model",),
+}
+
+
+def current_rules() -> Dict[str, Optional[Tuple[str, ...]]]:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextmanager
+def use_rules(rules: Dict[str, Optional[Tuple[str, ...]]]):
+    old = current_rules()
+    _state.rules = dict(rules)
+    try:
+        yield
+    finally:
+        _state.rules = old
+
+
+def _ambient_mesh():
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or getattr(m, "empty", True):
+            return None
+        return m
+    except Exception:
+        return None
+
+
+def resolve_spec(logical: Tuple[Optional[str], ...], shape=None) -> Optional[P]:
+    """Resolve logical axis names to a PartitionSpec for the ambient mesh."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return None
+    mesh_axes = set(mesh.axis_names)
+    sizes = dict(mesh.shape)  # {axis_name: size}
+    rules = current_rules()
+    parts = []
+    used = set()
+    for i, name in enumerate(logical):
+        if name is None:
+            parts.append(None)
+            continue
+        target = rules.get(name)
+        if target is None:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in target if a in mesh_axes and a not in used)
+        if not axes:
+            parts.append(None)
+            continue
+        if shape is not None:
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if shape[i] % total != 0:
+                parts.append(None)
+                continue
+        used.update(axes)
+        parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def hint(x, *logical: Optional[str]):
+    """with_sharding_constraint on logical axes; no-op without a mesh."""
+    spec = resolve_spec(tuple(logical), shape=getattr(x, "shape", None))
+    if spec is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError, TypeError):
+        return x

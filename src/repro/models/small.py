@@ -1,0 +1,249 @@
+"""The paper's FL benchmark models (Table III).
+
+* ``femnist_cnn``    — CNN (2 conv + 2 FC), 62-way FEMNIST classification.
+* ``shakespeare_lstm`` — RNN (2 LSTM + 1 FC) char LM, vocab 80.
+* ``cifar_resnet18`` — ResNet-18 (CIFAR variant: 3x3 stem, no maxpool).
+
+Adaptation note: BatchNorm running statistics are notoriously ill-defined
+under FedAvg (client statistics diverge under non-IID data); we use
+GroupNorm(8) — standard practice in FL reproductions — so model state is
+parameters only and the aggregation stage stays a pure pytree average.
+
+All three expose the same functional interface used by the FL runtime:
+``init(key)``, ``apply(params, x)`` -> logits, ``loss_and_metrics``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    ParamDef, init_params, normal_init, ones_init, zeros_init,
+)
+
+
+@dataclass(frozen=True, eq=False)  # identity hash: jit/lru cache key
+class FLModel:
+    name: str
+    defs: Any
+    apply: Callable  # (params, x) -> logits
+    num_classes: int
+    input_shape: Tuple[int, ...]
+    is_sequence: bool = False
+
+    def init(self, key):
+        return init_params(self.defs, key)
+
+    def loss_and_metrics(self, params, batch):
+        x, y = batch["x"], batch["y"]
+        logits = self.apply(params, x)
+        if self.is_sequence:
+            # char LM: predict next char at every position
+            logits = logits[:, :-1]
+            y = x[:, 1:]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        acc = (jnp.argmax(logits, -1) == y).mean()
+        return nll.mean(), {"loss": nll.mean(), "accuracy": acc}
+
+
+jax.tree_util.register_static(FLModel)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride=1, padding="SAME"):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def _conv_def(k, cin, cout):
+    init = normal_init(1.0)
+    def he(key, shape, dtype):
+        fan_in = shape[0] * shape[1] * shape[2]
+        return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)).astype(dtype)
+    return {
+        "w": ParamDef((k, k, cin, cout), (None, None, None, None), init=he),
+        "b": ParamDef((cout,), (None,), init=zeros_init),
+    }
+
+
+def _groupnorm(x, scale, bias, groups=8, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mu = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, H, W, C) * scale + bias).astype(x.dtype)
+
+
+def _gn_def(c):
+    return {"scale": ParamDef((c,), (None,), init=ones_init),
+            "bias": ParamDef((c,), (None,), init=zeros_init)}
+
+
+def _fc_def(din, dout):
+    return {"w": ParamDef((din, dout), (None, None)),
+            "b": ParamDef((dout,), (None,), init=zeros_init)}
+
+
+def _fc(x, p):
+    return x @ p["w"] + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# FEMNIST CNN (LEAF reference: conv5x5(32) -> pool -> conv5x5(64) -> pool
+#              -> fc(2048) -> fc(62))
+# ---------------------------------------------------------------------------
+
+
+def femnist_cnn() -> FLModel:
+    defs = {
+        "conv1": _conv_def(5, 1, 32),
+        "conv2": _conv_def(5, 32, 64),
+        "fc1": _fc_def(7 * 7 * 64, 2048),
+        "fc2": _fc_def(2048, 62),
+    }
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], 28, 28, 1)
+        x = jax.nn.relu(_conv(x, p["conv1"]["w"], p["conv1"]["b"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+        x = jax.nn.relu(_conv(x, p["conv2"]["w"], p["conv2"]["b"]))
+        x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+        x = x.reshape(x.shape[0], -1)
+        x = jax.nn.relu(_fc(x, p["fc1"]))
+        return _fc(x, p["fc2"])
+
+    return FLModel("femnist_cnn", defs, apply, 62, (28, 28, 1))
+
+
+# ---------------------------------------------------------------------------
+# Shakespeare LSTM (LEAF reference: embed(8) -> 2xLSTM(256) -> fc(vocab))
+# ---------------------------------------------------------------------------
+
+SHAKESPEARE_VOCAB = 80
+
+
+def _lstm_def(din, dh):
+    return {
+        "wx": ParamDef((din, 4 * dh), (None, None)),
+        "wh": ParamDef((dh, 4 * dh), (None, None)),
+        "b": ParamDef((4 * dh,), (None,), init=zeros_init),
+    }
+
+
+def _lstm(p, x, h0, c0):
+    dh = h0.shape[-1]
+
+    def cell(carry, xt):
+        h, c = carry
+        z = xt @ p["wx"] + h @ p["wh"] + p["b"]
+        i, f, g, o = jnp.split(z, 4, axis=-1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(cell, (h0, c0), x.swapaxes(0, 1))
+    return ys.swapaxes(0, 1)
+
+
+def shakespeare_lstm(vocab: int = SHAKESPEARE_VOCAB, embed: int = 8,
+                     hidden: int = 256) -> FLModel:
+    defs = {
+        "embed": ParamDef((vocab, embed), (None, None), init=normal_init(0.1)),
+        "lstm1": _lstm_def(embed, hidden),
+        "lstm2": _lstm_def(hidden, hidden),
+        "fc": _fc_def(hidden, vocab),
+    }
+
+    def apply(p, x):
+        B, S = x.shape
+        e = p["embed"][x]
+        h0 = jnp.zeros((B, hidden), e.dtype)
+        y = _lstm(p["lstm1"], e, h0, h0)
+        y = _lstm(p["lstm2"], y, h0, h0)
+        return _fc(y, p["fc"])
+
+    return FLModel("shakespeare_lstm", defs, apply, vocab, (80,),
+                   is_sequence=True)
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (CIFAR variant, GroupNorm)
+# ---------------------------------------------------------------------------
+
+
+def _block_def(cin, cout, stride):
+    d = {
+        "conv1": _conv_def(3, cin, cout),
+        "gn1": _gn_def(cout),
+        "conv2": _conv_def(3, cout, cout),
+        "gn2": _gn_def(cout),
+    }
+    if stride != 1 or cin != cout:
+        d["down"] = _conv_def(1, cin, cout)
+        d["down_gn"] = _gn_def(cout)
+    return d
+
+
+def _block(p, x, stride):
+    y = _conv(x, p["conv1"]["w"], p["conv1"]["b"], stride)
+    y = jax.nn.relu(_groupnorm(y, p["gn1"]["scale"], p["gn1"]["bias"]))
+    y = _conv(y, p["conv2"]["w"], p["conv2"]["b"])
+    y = _groupnorm(y, p["gn2"]["scale"], p["gn2"]["bias"])
+    if "down" in p:
+        x = _conv(x, p["down"]["w"], p["down"]["b"], stride)
+        x = _groupnorm(x, p["down_gn"]["scale"], p["down_gn"]["bias"])
+    return jax.nn.relu(x + y)
+
+
+def cifar_resnet18(num_classes: int = 10) -> FLModel:
+    widths = [64, 128, 256, 512]
+    defs: Dict[str, Any] = {
+        "stem": _conv_def(3, 3, 64),
+        "stem_gn": _gn_def(64),
+        "fc": _fc_def(512, num_classes),
+    }
+    strides = {}
+    cin = 64
+    for si, w in enumerate(widths):
+        for bi in range(2):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            defs[f"b{si}{bi}"] = _block_def(cin, w, stride)
+            strides[f"b{si}{bi}"] = stride
+            cin = w
+
+    def apply(p, x):
+        x = x.reshape(x.shape[0], 32, 32, 3)
+        x = _conv(x, p["stem"]["w"], p["stem"]["b"])
+        x = jax.nn.relu(_groupnorm(x, p["stem_gn"]["scale"], p["stem_gn"]["bias"]))
+        for si in range(4):
+            for bi in range(2):
+                x = _block(p[f"b{si}{bi}"], x, strides[f"b{si}{bi}"])
+        x = x.mean(axis=(1, 2))
+        return _fc(x, p["fc"])
+
+    return FLModel("cifar_resnet18", defs, apply, num_classes, (32, 32, 3))
+
+
+# small logistic model for fast unit tests
+def linear_model(din: int = 64, classes: int = 10) -> FLModel:
+    defs = {"fc": _fc_def(din, classes)}
+
+    def apply(p, x):
+        return _fc(x.reshape(x.shape[0], -1), p["fc"])
+
+    return FLModel("linear", defs, apply, classes, (din,))

@@ -1,0 +1,479 @@
+"""Composable decoder / encoder-decoder stack covering all assigned families.
+
+A model is described by ``ArchConfig.layer_pattern`` (one mixer name per
+layer).  Consecutive layers with identical (mixer, ffn) kind are grouped into
+*segments*; each segment's parameters are stacked on a leading "layers" axis
+and executed with ``jax.lax.scan`` + per-layer ``jax.checkpoint`` (remat), so
+a 96-layer Nemotron compiles one layer body, while RecurrentGemma's
+(rglru, rglru, local_attn) pattern becomes alternating short segments.
+
+Three entry points per model:
+  * ``forward``      — training/prefill full-sequence pass -> logits (+ moe aux)
+  * ``loss_fn``      — next-token CE (masked for VLM prefix / audio)
+  * ``decode_step``  — one-token step against caches from ``init_cache``
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ArchConfig
+from repro.models import attention as attn
+from repro.models import kvcache as kvc
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import (
+    ParamDef, apply_norm, init_params, is_paramdef_leaf, norm_defs, normal_init,
+)
+from repro.models.sharding import hint
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    mixer: str          # attn | local_attn | mla | rwkv6 | rglru
+    ffn: str            # dense | dense0 | moe | rwkv  (rwkv: fused channel-mix)
+    count: int
+    first_layer: int
+
+
+def segments(cfg: ArchConfig) -> List[Segment]:
+    kinds = []
+    for li, mixer in enumerate(cfg.layer_pattern):
+        if cfg.family == "ssm":
+            ffn = "rwkv"
+        elif cfg.moe is not None:
+            ffn = "dense0" if li < cfg.moe.first_dense_layers else "moe"
+        else:
+            ffn = "dense"
+        kinds.append((mixer, ffn))
+    segs: List[Segment] = []
+    for li, kind in enumerate(kinds):
+        if segs and (segs[-1].mixer, segs[-1].ffn) == kind:
+            segs[-1] = dataclasses.replace(segs[-1], count=segs[-1].count + 1)
+        else:
+            segs.append(Segment(kind[0], kind[1], 1, li))
+    return segs
+
+
+def _layer_defs(cfg: ArchConfig, seg: Segment, cross: bool):
+    d: Dict[str, Any] = {"norm1": norm_defs(cfg)}
+    if seg.mixer in ("attn", "local_attn"):
+        d["attn"] = attn.attn_defs(cfg)
+    elif seg.mixer == "mla":
+        d["mla"] = attn.mla_defs(cfg)
+    elif seg.mixer == "rwkv6":
+        d["time"] = rwkv_mod.rwkv_defs(cfg)["time"]
+        d["norm2"] = norm_defs(cfg)
+        d["channel"] = rwkv_mod.rwkv_defs(cfg)["channel"]
+        if cross:
+            raise ValueError("rwkv6 decoder with cross attention unsupported")
+        return d
+    elif seg.mixer == "rglru":
+        d["rglru"] = rglru_mod.rglru_defs(cfg)
+    else:
+        raise ValueError(seg.mixer)
+    if cross:
+        d["norm_cross"] = norm_defs(cfg)
+        d["cross"] = attn.cross_attn_defs(cfg)
+    d["norm2"] = norm_defs(cfg)
+    if seg.ffn == "dense":
+        d["mlp"] = mlp_mod.mlp_defs(cfg)
+    elif seg.ffn == "dense0":
+        d["mlp"] = mlp_mod.mlp_defs(cfg, d_ff=cfg.moe.dense_d_ff or cfg.d_ff)
+    elif seg.ffn == "moe":
+        d["moe"] = moe_mod.moe_defs(cfg)
+    return d
+
+
+def _stack(defs, n: int):
+    def stack_one(pd: ParamDef) -> ParamDef:
+        base = pd.init
+        def stacked_init(key, shape, dtype, _base=base):
+            from repro.models.layers import _default_init
+            fn = _base or _default_init
+            keys = jax.random.split(key, shape[0])
+            return jax.vmap(lambda k: fn(k, shape[1:], dtype))(keys)
+        return ParamDef((n,) + pd.shape, ("layers",) + pd.axes, pd.dtype,
+                        stacked_init)
+    return jax.tree_util.tree_map(stack_one, defs, is_leaf=is_paramdef_leaf)
+
+
+# ---------------------------------------------------------------------------
+# Model parameter tree
+# ---------------------------------------------------------------------------
+
+
+def model_defs(cfg: ArchConfig):
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab, cfg.d_model), ("vocab", "embed"),
+                          init=normal_init(0.02)),
+        "final_norm": norm_defs(cfg),
+    }
+    if cfg.pos_embedding == "learned":
+        defs["pos_embed"] = ParamDef((cfg.max_seq_len, cfg.d_model),
+                                     (None, "embed"), init=normal_init(0.02))
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((cfg.d_model, cfg.vocab),
+                                   ("embed", "vocab"), init=normal_init(0.02))
+    cross = cfg.encoder_layers > 0
+    defs["segments"] = [
+        _stack(_layer_defs(cfg, s, cross), s.count) for s in segments(cfg)
+    ]
+    if cross:
+        enc_seg = Segment("attn", "dense", cfg.encoder_layers, 0)
+        defs["encoder"] = {
+            "pos_embed": ParamDef((cfg.n_frames, cfg.d_model), (None, "embed"),
+                                  init=normal_init(0.02)),
+            "layers": _stack(_layer_defs(cfg, enc_seg, cross=False),
+                             cfg.encoder_layers),
+            "final_norm": norm_defs(cfg),
+        }
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Layer application (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_layer(cfg: ArchConfig, seg: Segment, p, x, positions, enc_kv):
+    """One layer, full sequence. Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(cfg, p["norm1"], x)
+    if seg.mixer == "attn":
+        out, _ = attn.gqa_attention(cfg, p["attn"], h, positions)
+    elif seg.mixer == "local_attn":
+        out, _ = attn.gqa_attention(cfg, p["attn"], h, positions,
+                                    window=cfg.window)
+    elif seg.mixer == "mla":
+        out, _ = attn.mla_attention(cfg, p["mla"], h, positions)
+    elif seg.mixer == "rwkv6":
+        B = x.shape[0]
+        s0 = jnp.zeros((B, cfg.d_model // cfg.rwkv_head_dim,
+                        cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32)
+        x_prev = jnp.zeros((B, cfg.d_model), x.dtype)
+        out, _, _ = rwkv_mod.time_mix(cfg, p["time"], h, x_prev, s0)
+        x = x + out
+        h2 = apply_norm(cfg, p["norm2"], x)
+        out2, _ = rwkv_mod.channel_mix(cfg, p["channel"], h2,
+                                       jnp.zeros((B, cfg.d_model), x.dtype))
+        return x + out2, aux
+    elif seg.mixer == "rglru":
+        state = rglru_mod.init_state(cfg, x.shape[0], x.dtype)
+        out, _ = rglru_mod.rglru_block(cfg, p["rglru"], h, state)
+    else:
+        raise ValueError(seg.mixer)
+    x = x + out
+    if enc_kv is not None:
+        h = apply_norm(cfg, p["norm_cross"], x)
+        x = x + attn.cross_attention(cfg, p["cross"], h, enc_kv)
+    h = apply_norm(cfg, p["norm2"], x)
+    if seg.ffn == "moe":
+        out, moe_aux = moe_mod.moe_apply(cfg, p["moe"], h)
+        aux = aux + moe_aux
+    else:
+        out = mlp_mod.mlp(cfg, p["mlp"], h)
+    return x + out, aux
+
+
+def _run_segment(cfg: ArchConfig, seg: Segment, seg_params, x, positions,
+                 enc_kv, remat: bool):
+    def body(carry, layer_params):
+        xc, auxc = carry
+        fn = lambda pp, xx: _apply_layer(cfg, seg, pp, xx, positions, enc_kv)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x_new, aux = fn(layer_params, xc)
+        return (x_new, auxc + aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               seg_params)
+    return x, aux
+
+
+def _encoder_forward(cfg: ArchConfig, params, frames, remat: bool):
+    enc = params["encoder"]
+    x = frames + enc["pos_embed"][None, : frames.shape[1]].astype(frames.dtype)
+    enc_seg = Segment("attn", "dense", cfg.encoder_layers, 0)
+
+    def body(carry, layer_params):
+        h = apply_norm(cfg, layer_params["norm1"], carry)
+        out = attn.gqa_bidirectional(cfg, layer_params["attn"], h,
+                                     jnp.arange(carry.shape[1])[None])
+        xc = carry + out
+        h = apply_norm(cfg, layer_params["norm2"], xc)
+        xc = xc + mlp_mod.mlp(cfg, layer_params["mlp"], h)
+        return xc, None
+
+    fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(fn, x, enc["layers"])
+    return apply_norm(cfg, enc["final_norm"], x)
+
+
+def forward(cfg: ArchConfig, params, tokens, frames=None, remat: bool = True):
+    """Full-sequence forward.  tokens: (B, S_text) int32;
+    frames: (B, F, d_model) for vlm/audio stubs.  Returns (logits, aux)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dt)
+    x = hint(x, "batch", "seq", "embed")
+    if cfg.family == "vlm":
+        assert frames is not None
+        x = jnp.concatenate([frames.astype(dt), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+    if cfg.pos_embedding == "learned":
+        x = x + params["pos_embed"][None, :S].astype(dt)
+    enc_out = None
+    if cfg.encoder_layers:
+        assert frames is not None
+        enc_out = _encoder_forward(cfg, params, frames.astype(dt), remat)
+
+    aux = jnp.zeros((), jnp.float32)
+    for seg, seg_params in zip(segments(cfg), params["segments"]):
+        if enc_out is not None:
+            # cross-attention K/V are computed per layer inside the scan body
+            x, seg_aux = _run_segment_cross(cfg, seg, seg_params, x,
+                                            positions, enc_out, remat)
+        else:
+            x, seg_aux = _run_segment(cfg, seg, seg_params, x, positions,
+                                      None, remat)
+        aux = aux + seg_aux
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    return logits, aux
+
+
+def _run_segment_cross(cfg, seg, seg_params, x, positions, enc_out, remat):
+    def body(carry, layer_params):
+        xc, auxc = carry
+        def fn(pp, xx):
+            kv = attn.encode_cross_kv(cfg, pp["cross"], enc_out)
+            return _apply_layer(cfg, seg, pp, xx, positions, kv)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x_new, aux = fn(layer_params, xc)
+        return (x_new, auxc + aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               seg_params)
+    return x, aux
+
+
+def unembed(cfg: ArchConfig, params, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    return hint(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ArchConfig, params, batch, remat: bool = True):
+    """Next-token cross-entropy.  batch: {"tokens": (B,S)[, "frames": ...]}."""
+    tokens = batch["tokens"]
+    frames = batch.get("frames")
+    logits, aux = forward(cfg, params, tokens, frames=frames, remat=remat)
+    if cfg.family == "vlm":
+        logits = logits[:, frames.shape[1]:]     # text region only
+    # predict token t+1 from position t
+    logits = logits[:, :-1]
+    labels = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = nll.mean()
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_weight * aux
+    return loss, {"nll": nll.mean(), "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _seg_cache_specs(cfg: ArchConfig, seg: Segment, batch: int, length: int,
+                     ring: bool, dtype):
+    hd = cfg.resolved_head_dim
+    if seg.mixer == "attn":
+        L = cfg.decode_window if ring else length
+        base = kvc.attn_cache_defs(cfg, batch, L, dtype)
+    elif seg.mixer == "local_attn":
+        base = kvc.attn_cache_defs(cfg, batch, min(cfg.window, length), dtype)
+    elif seg.mixer == "mla":
+        L = cfg.decode_window if ring else length
+        base = kvc.mla_cache_defs(cfg, batch, L, dtype)
+    elif seg.mixer == "rwkv6":
+        H = cfg.d_model // cfg.rwkv_head_dim
+        base = {
+            "att_x": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+            "ffn_x": jax.ShapeDtypeStruct((batch, cfg.d_model), dtype),
+            "wkv": jax.ShapeDtypeStruct(
+                (batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim), jnp.float32),
+        }
+    elif seg.mixer == "rglru":
+        W = cfg.lru_width or cfg.d_model
+        base = {
+            "h": jax.ShapeDtypeStruct((batch, W), jnp.float32),
+            "conv": jax.ShapeDtypeStruct((batch, cfg.conv1d_width - 1, W), dtype),
+        }
+    else:
+        raise ValueError(seg.mixer)
+    # stack over the segment's layers
+    stacked = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((seg.count,) + s.shape, s.dtype),
+        base, is_leaf=lambda s: isinstance(s, jax.ShapeDtypeStruct))
+    return stacked
+
+
+def cache_specs(cfg: ArchConfig, batch: int, length: int, ring: bool):
+    dtype = jnp.dtype(cfg.dtype)
+    spec: Dict[str, Any] = {
+        "segments": [
+            _seg_cache_specs(cfg, s, batch, length, ring, dtype)
+            for s in segments(cfg)
+        ]
+    }
+    if cfg.encoder_layers:
+        hd = cfg.resolved_head_dim
+        spec["enc_kv"] = {
+            "k": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.n_frames, cfg.n_heads, hd), dtype),
+            "v": jax.ShapeDtypeStruct(
+                (cfg.n_layers, batch, cfg.n_frames, cfg.n_heads, hd), dtype),
+        }
+    return spec
+
+
+def init_cache(cfg: ArchConfig, batch: int, length: int, ring: bool):
+    return kvc.zeros_like_specs(cache_specs(cfg, batch, length, ring))
+
+
+def _decode_layer(cfg: ArchConfig, seg: Segment, p, x, cache, pos, ring: bool,
+                  enc_kv=None):
+    """One-layer one-token decode. Returns (x, new_cache)."""
+    h = apply_norm(cfg, p["norm1"], x)
+    if seg.mixer in ("attn", "local_attn"):
+        length = cache["k"].shape[1]
+        use_ring = ring or seg.mixer == "local_attn"
+        slot = kvc.cache_slot(pos, length, use_ring)
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        # project q,k,v (rope applied with absolute position), write cache
+        q, k, v = attn._project_qkv(cfg, p["attn"], h, positions)
+        k_cache = kvc.write_slot(cache["k"], k, slot)
+        v_cache = kvc.write_slot(cache["v"], v, slot)
+        mask = kvc.cache_mask(x.shape[0], pos, length, use_ring)
+        B = x.shape[0]
+        K = cfg.n_kv_heads
+        G = cfg.n_heads // K
+        qg = q.reshape(B, 1, K, G, q.shape[-1])
+        import math as _math
+        scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                            preferred_element_type=jnp.float32)
+        scores = scores * (1.0 / _math.sqrt(q.shape[-1]))
+        scores = jnp.where(mask[:, None, None, None, :], scores, attn.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v_cache.dtype), v_cache)
+        ctx = ctx.reshape(B, 1, cfg.n_heads, -1)
+        out = jnp.einsum("bshf,hfd->bsd", ctx, p["attn"]["wo"].astype(x.dtype))
+        new_cache = {"k": k_cache, "v": v_cache}
+    elif seg.mixer == "mla":
+        length = cache["c"].shape[1]
+        slot = kvc.cache_slot(pos, length, ring)
+        positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+        c_new, kr_new = attn._mla_latent(cfg, p["mla"], h, positions)
+        c_cache = kvc.write_slot(cache["c"], c_new, slot)
+        kr_cache = kvc.write_slot(cache["kr"], kr_new, slot)
+        mask = kvc.cache_mask(x.shape[0], pos, length, ring)
+        out, _ = attn.mla_decode(cfg, p["mla"], h, c_cache, kr_cache, mask,
+                                 positions)
+        new_cache = {"c": c_cache, "kr": kr_cache}
+    elif seg.mixer == "rwkv6":
+        out, att_x, wkv = rwkv_mod.time_mix_decode(cfg, p["time"], h,
+                                                   cache["att_x"], cache["wkv"])
+        x = x + out
+        h2 = apply_norm(cfg, p["norm2"], x)
+        out2, ffn_x = rwkv_mod.channel_mix(cfg, p["channel"], h2,
+                                           cache["ffn_x"])
+        return x + out2, {"att_x": att_x, "ffn_x": ffn_x, "wkv": wkv}
+    elif seg.mixer == "rglru":
+        out, new_state = rglru_mod.rglru_decode(cfg, p["rglru"], h, cache)
+        new_cache = new_state
+    else:
+        raise ValueError(seg.mixer)
+    x = x + out
+    if enc_kv is not None:
+        hc = apply_norm(cfg, p["norm_cross"], x)
+        x = x + attn.cross_attention(cfg, p["cross"], hc, enc_kv)
+    h = apply_norm(cfg, p["norm2"], x)
+    if seg.ffn == "moe":
+        out, _ = moe_mod.moe_apply(cfg, p["moe"], h)
+    else:
+        out = mlp_mod.mlp(cfg, p["mlp"], h)
+    return x + out, new_cache
+
+
+def _last(h2):
+    return h2[:, -1, :]
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos, ring: bool = False):
+    """One decode step.  tokens: (B,1) int32; pos: scalar int32 (position of
+    this token).  Returns (logits (B,1,V), new_cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens].astype(dt)
+    if cfg.pos_embedding == "learned":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], pos, 1, axis=0)[None].astype(dt)
+
+    new_seg_caches = []
+    for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"],
+                                          cache["segments"]):
+        def body(carry, xs):
+            xc = carry
+            layer_params, layer_cache, layer_enc = xs
+            x_new, c_new = _decode_layer(cfg, seg, layer_params, xc,
+                                         layer_cache, pos, ring, layer_enc)
+            return x_new, c_new
+
+        if cfg.encoder_layers:
+            enc = {"k": cache["enc_kv"]["k"][seg.first_layer:
+                                             seg.first_layer + seg.count],
+                   "v": cache["enc_kv"]["v"][seg.first_layer:
+                                             seg.first_layer + seg.count]}
+            def body_enc(carry, xs):
+                layer_params, layer_cache, ek, ev = xs
+                x_new, c_new = _decode_layer(cfg, seg, layer_params, carry,
+                                             layer_cache, pos, ring, (ek, ev))
+                return x_new, c_new
+            x, new_cache = jax.lax.scan(
+                body_enc, x, (seg_params, seg_cache, enc["k"], enc["v"]))
+        else:
+            def body_plain(carry, xs):
+                layer_params, layer_cache = xs
+                x_new, c_new = _decode_layer(cfg, seg, layer_params, carry,
+                                             layer_cache, pos, ring, None)
+                return x_new, c_new
+            x, new_cache = jax.lax.scan(body_plain, x, (seg_params, seg_cache))
+        new_seg_caches.append(new_cache)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params, x)
+    out_cache = {"segments": new_seg_caches}
+    if cfg.encoder_layers:
+        out_cache["enc_kv"] = cache["enc_kv"]
+    return logits, out_cache

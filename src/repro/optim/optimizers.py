@@ -1,0 +1,115 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+An :class:`Optimizer` is an (init, update) pair over parameter pytrees.
+``update`` maps (grads, state, params) -> (updates, state); apply with
+``apply_updates``.  SGD with momentum 0.9 is the paper's default (§VIII-B).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+jax.tree_util.register_static(Optimizer)
+
+
+def global_norm(tree: PyTree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), state
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -lr * (momentum * m + g), new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
+        return upd, new_m
+
+    return Optimizer(init, update, f"sgd(lr={lr},m={momentum})")
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jnp.ndarray
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+        return AdamState(zeros(), zeros(), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g), state.nu, grads)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            step = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(step.dtype)
+            return -lr * step
+
+        return (jax.tree_util.tree_map(upd, mu, nu, params),
+                AdamState(mu, nu, count))
+
+    return Optimizer(init, update, f"adamw(lr={lr})")
+
+
+from functools import lru_cache
+
+
+@lru_cache(maxsize=128)  # shared instance => shared jit cache across clients
+def get_optimizer(name: str, lr: float, momentum: float = 0.9,
+                  weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr, momentum=momentum, weight_decay=weight_decay)
+    if name in ("adam", "adamw"):
+        return adamw(lr, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,3 @@
+from repro.simulation.heterogeneity import (  # noqa: F401
+    SystemHeterogeneity, straggler_stats,
+)

@@ -1,0 +1,55 @@
+"""System-heterogeneity simulation (paper §V-A, "lightweight and realistic").
+
+Clients are assigned device classes whose relative training speeds follow
+the spread of mobile-SoC training throughput in AI-Benchmark [37].  During a
+round, a client's *simulated* training time is
+
+    time = base_time(samples, batches) * speed_ratio(client) + net_latency
+
+The paper implements this with wall-clock sleeps before upload; on TPU we
+keep a **virtual clock** (sleeping an accelerator wastes it and is
+non-deterministic — DESIGN.md §2, assumption 2).  The virtual times feed the
+straggler analysis (Fig. 6) and GreedyAda scheduling identically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core.config import SystemHeterogeneityConfig
+
+
+@dataclass
+class SystemHeterogeneity:
+    cfg: SystemHeterogeneityConfig
+    assignment: Dict[str, float] = field(default_factory=dict)
+
+    def speed_ratio(self, client_id: str) -> float:
+        if not self.cfg.enabled:
+            return 1.0
+        if client_id not in self.assignment:
+            rng = np.random.RandomState(
+                (hash(client_id) ^ self.cfg.seed) % (2**31))
+            self.assignment[client_id] = float(
+                rng.choice(self.cfg.speed_ratios))
+        return self.assignment[client_id]
+
+    def simulate_time(self, client_id: str, base_time: float) -> float:
+        """Virtual wall-clock for one client's local round."""
+        return base_time * self.speed_ratio(client_id) + self.cfg.network_latency
+
+    def round_times(self, base_times: Dict[str, float]) -> Dict[str, float]:
+        return {c: self.simulate_time(c, t) for c, t in base_times.items()}
+
+
+def straggler_stats(times: Dict[str, float]) -> Dict[str, float]:
+    v = np.array(list(times.values()))
+    return {
+        "min": float(v.min()),
+        "max": float(v.max()),
+        "mean": float(v.mean()),
+        "std": float(v.std()),
+        "max_over_min": float(v.max() / max(v.min(), 1e-9)),
+    }

@@ -1,0 +1,3 @@
+from repro.tracking.store import (  # noqa: F401
+    ClientMetrics, RoundMetrics, TaskMetrics, Tracker,
+)

@@ -1,0 +1,18 @@
+import os
+import sys
+
+# smoke tests and benches must see the single real CPU device — the 512-way
+# host-device override belongs ONLY to repro.launch.dryrun (its own process).
+assert "xla_force_host_platform_device_count" not in \
+    os.environ.get("XLA_FLAGS", ""), \
+    "do not set the dry-run XLA_FLAGS globally (see system design notes)"
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture()
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,117 @@
+"""Attention correctness: chunked==plain, windowing, MLA absorbed decode."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ArchConfig, MLAConfig
+from repro.models import attention as attn
+from repro.models.layers import init_params
+
+
+def _plain_reference(q, k, v, window=0):
+    """Naive full-matrix causal attention (fp32)."""
+    B, S, K, G, D = q.shape
+    mask = attn._causal_mask(S, S, 0, window)
+    return attn._plain_attention(q, k, v, mask)
+
+
+@pytest.mark.parametrize("S,window", [(256, 0), (512, 0), (512, 128),
+                                      (384, 96)])
+def test_chunked_equals_plain(S, window):
+    B, K, G, D = 2, 2, 3, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (B, S, K, G, D))
+    k = jax.random.normal(keys[1], (B, S, K, D))
+    v = jax.random.normal(keys[2], (B, S, K, D))
+    out = attn.chunked_causal_attention(q, k, v, window=window, q_chunk=128)
+    exp = _plain_reference(q, k, v, window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_window_limits_receptive_field():
+    """Perturbing a key outside the window must not change the output."""
+    B, S, K, G, D, W = 1, 256, 1, 1, 8, 64
+    keys = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(keys[0], (B, S, K, G, D))
+    k = jax.random.normal(keys[1], (B, S, K, D))
+    v = jax.random.normal(keys[2], (B, S, K, D))
+    out1 = attn.chunked_causal_attention(q, k, v, window=W, q_chunk=64)
+    k2 = k.at[:, 10].add(100.0)    # position 10 is outside window of t>=74
+    v2 = v.at[:, 10].add(100.0)
+    out2 = attn.chunked_causal_attention(q, k2, v2, window=W, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(out1[:, 80:]),
+                               np.asarray(out2[:, 80:]), rtol=1e-4, atol=1e-5)
+    # but positions <= 73 do see it
+    assert np.abs(np.asarray(out1[:, :40]) - np.asarray(out2[:, :40])).max() > 1e-3
+
+
+def test_causality():
+    """Future keys must not affect past outputs."""
+    B, S, K, G, D = 1, 128, 1, 2, 8
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(keys[0], (B, S, K, G, D))
+    k = jax.random.normal(keys[1], (B, S, K, D))
+    v = jax.random.normal(keys[2], (B, S, K, D))
+    out1 = attn.chunked_causal_attention(q, k, v, q_chunk=64)
+    k2 = k.at[:, 100:].add(50.0)
+    v2 = v.at[:, 100:].add(50.0)
+    out2 = attn.chunked_causal_attention(q, k2, v2, q_chunk=64)
+    np.testing.assert_allclose(np.asarray(out1[:, :100]),
+                               np.asarray(out2[:, :100]), rtol=1e-5, atol=1e-6)
+
+
+def test_rope_relative_property():
+    """RoPE: dot products depend only on relative position."""
+    from repro.models.layers import apply_rope
+    D = 32
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(4), (1, 1, 1, D))
+
+    def score(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]), 10_000.0)
+        kr = apply_rope(k, jnp.array([[pk]]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert score(5, 3) == pytest.approx(score(105, 103), rel=1e-4)
+    assert score(7, 0) == pytest.approx(score(57, 50), rel=1e-4)
+
+
+def _mla_cfg():
+    return ArchConfig(
+        name="mla-test", n_layers=1, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=128,
+        mla=MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16))
+
+
+def test_mla_absorbed_decode_matches_training_form():
+    """Decode (absorbed W_uk/W_uv, latent cache) must equal the decompressed
+    training attention at the last position."""
+    cfg = _mla_cfg()
+    p = init_params(attn.mla_defs(cfg), jax.random.PRNGKey(5))
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, cfg.d_model)) * 0.5
+    positions = jnp.arange(S)[None, :]
+    out_train, (c, kr) = attn.mla_attention(cfg, p, x, positions)
+
+    # decode the last token against the cache of the first S-1 latents
+    c_cache = jnp.zeros((B, S, cfg.mla.kv_lora_rank))
+    kr_cache = jnp.zeros((B, S, cfg.mla.qk_rope_head_dim))
+    c_cache = c_cache.at[:, : S - 1].set(c[:, : S - 1])
+    kr_cache = kr_cache.at[:, : S - 1].set(kr[:, : S - 1])
+    x_last = x[:, S - 1 : S]
+    pos_last = jnp.full((B, 1), S - 1)
+    c_new, kr_new = attn._mla_latent(cfg, p, x_last, pos_last)
+    c_cache = c_cache.at[:, S - 1 : S].set(c_new)
+    kr_cache = kr_cache.at[:, S - 1 : S].set(kr_new)
+    mask = jnp.broadcast_to(jnp.arange(S)[None, :] <= S - 1, (B, S))
+    out_dec, _ = attn.mla_decode(cfg, p, x_last, c_cache, kr_cache, mask,
+                                 pos_last)
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_train[:, -1]),
+                               rtol=2e-3, atol=2e-4)

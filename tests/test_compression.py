@@ -1,0 +1,73 @@
+"""Compression stages: STC, int8, error feedback, payload accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import compression as comp
+
+
+def _tree(key, scale=1.0):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (64, 32)) * scale,
+            "b": {"w": jax.random.normal(k2, (1000,)) * scale}}
+
+
+def test_stc_compress_decompress_sparsity():
+    tree = _tree(jax.random.PRNGKey(0))
+    c = comp.compress(tree, "stc", stc_sparsity=0.05)
+    d = comp.decompress(c)
+    for leaf in jax.tree_util.tree_leaves(d):
+        frac = float((leaf != 0).mean())
+        assert frac <= 0.12
+
+
+def test_stc_payload_smaller_than_dense():
+    tree = _tree(jax.random.PRNGKey(1))
+    dense_bytes = comp.payload_bytes(tree)
+    c = comp.compress(tree, "stc", stc_sparsity=0.01)
+    assert comp.payload_bytes(c) < dense_bytes / 5
+
+
+def test_int8_roundtrip_bounded_error():
+    tree = _tree(jax.random.PRNGKey(2), scale=3.0)
+    c = comp.compress(tree, "int8")
+    d = comp.decompress(c)
+    for orig, rec in zip(jax.tree_util.tree_leaves(tree),
+                         jax.tree_util.tree_leaves(d)):
+        maxv = float(jnp.max(jnp.abs(orig)))
+        assert float(jnp.max(jnp.abs(orig - rec))) <= 0.51 * maxv / 127 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """With error feedback, the cumulative transmitted signal converges to
+    the cumulative true updates (the defining EF property)."""
+    key = jax.random.PRNGKey(3)
+    residual = comp.zero_residual({"w": jnp.zeros((2000,))})
+    total_true = jnp.zeros((2000,))
+    total_sent = jnp.zeros((2000,))
+    for i in range(30):
+        key, k = jax.random.split(key)
+        upd = {"w": jax.random.normal(k, (2000,)) * 0.1}
+        c, residual = comp.compress_with_feedback(upd, residual, "stc", 0.05)
+        total_sent = total_sent + comp.decompress(c)["w"]
+        total_true = total_true + upd["w"]
+    # leftover error is exactly the residual
+    np.testing.assert_allclose(
+        np.asarray(total_true - total_sent), np.asarray(residual["w"]),
+        rtol=1e-4, atol=1e-4)
+    # and it is bounded (does not grow linearly with rounds)
+    rel = float(jnp.linalg.norm(residual["w"]) / jnp.linalg.norm(total_true))
+    assert rel < 1.0
+
+
+def test_none_compression_is_identity():
+    tree = _tree(jax.random.PRNGKey(4))
+    assert comp.compress(tree, "none") is tree
+
+
+def test_small_tensors_stay_dense():
+    tree = {"tiny": jnp.ones((4,)), "big": jnp.ones((8192,))}
+    c = comp.compress(tree, "stc", 0.01)
+    assert c["tiny"].kind == "dense"
+    assert c["big"].kind == "stc"

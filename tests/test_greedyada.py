@@ -1,0 +1,74 @@
+"""Property tests for GreedyAda (paper Algorithm 1, Eq. 1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.sched.greedyada import (
+    GreedyAda, random_allocation, slowest_allocation,
+)
+
+
+def _makespan(groups, times):
+    return max((sum(times[c] for c in g) for g in groups if g), default=0.0)
+
+
+@given(times=st.lists(st.floats(0.01, 100.0), min_size=4, max_size=60),
+       m=st.integers(1, 8))
+@settings(max_examples=50, deadline=None)
+def test_lpt_greedy_bound(times, m):
+    """List-scheduling guarantee: makespan <= sum/m + max_t [Graham 1969],
+    and every client is placed exactly once."""
+    ids = [f"c{i}" for i in range(len(times))]
+    t = dict(zip(ids, times))
+    sched = GreedyAda(num_devices=m)
+    sched.update(t)                      # profile everything
+    groups = sched.allocate(ids)
+    ms = _makespan(groups, t)
+    assert ms <= sum(times) / m + max(times) + 1e-6
+    flat = [c for g in groups for c in g]
+    assert sorted(flat) == sorted(ids)
+
+
+@given(times=st.lists(st.floats(0.1, 50.0), min_size=8, max_size=40),
+       m=st.integers(2, 6), seed=st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_greedy_never_worse_than_slowest_first(times, m, seed):
+    ids = [f"c{i}" for i in range(len(times))]
+    t = dict(zip(ids, times))
+    sched = GreedyAda(num_devices=m)
+    sched.update(t)
+    greedy = _makespan(sched.allocate(ids), t)
+    slowest = _makespan(slowest_allocation(ids, m, t), t)
+    assert greedy <= slowest + 1e-9
+
+
+def test_adaptive_profiling_updates_default():
+    """Algorithm 1 lines 26-27: t <- avg*m + t*(1-m)."""
+    sched = GreedyAda(num_devices=2, default_time=1.0, momentum=0.5)
+    sched.update({"a": 3.0, "b": 5.0})
+    assert sched.default_time == pytest.approx(0.5 * 4.0 + 0.5 * 1.0)
+    assert sched.profiles["a"].profiled
+    # unprofiled clients estimated with the updated default
+    assert sched._estimate("zzz") == pytest.approx(2.5)
+    assert sched._estimate("a") == pytest.approx(3.0)
+
+
+def test_unprofiled_clients_use_default_then_converge():
+    sched = GreedyAda(num_devices=2, default_time=1.0, momentum=1.0)
+    ids = [f"c{i}" for i in range(6)]
+    true_times = {c: float(i + 1) for i, c in enumerate(ids)}
+    # round 1: all defaults -> any allocation; then profile
+    g1 = sched.allocate(ids)
+    sched.update({c: true_times[c] for g in g1 for c in g})
+    g2 = sched.allocate(ids)
+    # with exact profiles, LPT on {1..6}/2 devices achieves the optimum (11)
+    ms = _makespan(g2, true_times)
+    assert ms == pytest.approx(11.0)
+
+
+def test_random_allocation_covers_everyone():
+    ids = [f"c{i}" for i in range(13)]
+    groups = random_allocation(ids, 4, seed=3)
+    flat = sorted(c for g in groups for c in g)
+    assert flat == sorted(ids)
+    assert len(groups) == 4

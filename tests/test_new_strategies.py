@@ -1,0 +1,48 @@
+"""Power-of-Choice (selection stage) and FedBuff (aggregation stage)
+plugins — each changes exactly one stage and still trains (Table VII)."""
+import numpy as np
+import pytest
+
+import repro as easyfl
+from repro.core.strategies import FedBuffServer, PowerOfChoiceServer
+
+
+@pytest.fixture(autouse=True)
+def _reset():
+    easyfl.reset()
+    yield
+    easyfl.reset()
+
+
+CFG = {
+    "model": "linear", "dataset": "synthetic",
+    "data": {"num_clients": 15, "partition": "dir", "batch_size": 32},
+    "server": {"rounds": 5, "clients_per_round": 5},
+    "client": {"local_epochs": 2, "lr": 0.1},
+}
+
+
+def test_power_of_choice_trains_and_biases_selection():
+    easyfl.init(CFG)
+    easyfl.register_server(PowerOfChoiceServer)
+    res = easyfl.run()
+    accs = [h["accuracy"] for h in res["history"]]
+    assert accs[-1] > accs[0]
+    # after warmup, selection must be loss-ranked, not uniform:
+    # server keeps per-client losses
+    from repro.core import api
+    srv = api._ctx.trainer.server
+    assert len(srv._last_loss) >= 5
+    sel = srv.selection(sorted(srv._last_loss), round_id=99)
+    losses = [srv._last_loss[c] for c in sel]
+    # selected clients' losses are the largest among a candidate set
+    assert np.mean(losses) >= np.mean(list(srv._last_loss.values())) - 1e-6
+
+
+def test_fedbuff_trains_with_staleness_weighting():
+    easyfl.init({**CFG, "system_heterogeneity": {"enabled": True}})
+    easyfl.register_server(FedBuffServer)
+    res = easyfl.run()
+    accs = [h["accuracy"] for h in res["history"]]
+    assert accs[-1] > accs[0]
+    assert accs[-1] > 0.5

@@ -1,0 +1,89 @@
+"""Property tests for statistical-heterogeneity partitioners (paper §V-A)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (
+    apply_sizes, class_partition, dirichlet_partition, iid_partition,
+    partition, unbalanced_sizes,
+)
+
+
+def _labels(n, k, seed):
+    return np.random.RandomState(seed).randint(0, k, n)
+
+
+@given(n=st.integers(200, 2000), n_clients=st.integers(2, 20),
+       seed=st.integers(0, 10))
+@settings(max_examples=20, deadline=None)
+def test_iid_partition_is_disjoint_cover(n, n_clients, seed):
+    labels = _labels(n, 10, seed)
+    parts = iid_partition(labels, n_clients, seed)
+    assert len(parts) == n_clients
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n
+
+
+@given(alpha=st.floats(0.05, 10.0), seed=st.integers(0, 5))
+@settings(max_examples=15, deadline=None)
+def test_dirichlet_partition_disjoint(alpha, seed):
+    labels = _labels(1000, 10, seed)
+    parts = dirichlet_partition(labels, 8, alpha, seed)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == len(np.unique(allidx))
+    assert len(allidx) <= 1000
+    assert min(len(p) for p in parts) >= 2
+
+
+def test_dirichlet_low_alpha_is_more_skewed():
+    """Smaller alpha -> more non-IID (paper Table IV ordering)."""
+    labels = _labels(20_000, 10, 0)
+
+    def skew(alpha):
+        parts = dirichlet_partition(labels, 10, alpha, 0)
+        # average per-client entropy of the class distribution
+        ents = []
+        for p in parts:
+            if len(p) == 0:
+                continue
+            hist = np.bincount(labels[p], minlength=10) / len(p)
+            ents.append(-np.sum(hist * np.log(hist + 1e-12)))
+        return np.mean(ents)
+
+    assert skew(0.1) < skew(100.0)
+
+
+@given(k=st.integers(1, 5), seed=st.integers(0, 5))
+@settings(max_examples=10, deadline=None)
+def test_class_partition_respects_class_budget(k, seed):
+    labels = _labels(4000, 10, seed)
+    parts = class_partition(labels, 10, k, seed)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == len(np.unique(allidx))
+    n_classes = [len(np.unique(labels[p])) for p in parts if len(p)]
+    # the greedy placer may exceed k only via leftover spill
+    assert np.mean(n_classes) <= k + 1.0
+
+
+@given(total=st.integers(100, 5000), n=st.integers(2, 30),
+       sigma=st.floats(0.1, 2.0), seed=st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_unbalanced_sizes_sum_and_minimum(total, n, sigma, seed):
+    sizes = unbalanced_sizes(total, n, sigma, seed)
+    assert sizes.sum() == total
+    assert (sizes >= 1).all()
+
+
+def test_unbalanced_creates_spread():
+    sizes = unbalanced_sizes(10_000, 20, sigma=1.0, seed=0)
+    assert sizes.max() > 2 * sizes.min()
+
+
+def test_partition_one_stop_all_methods():
+    labels = _labels(2000, 10, 0)
+    for method in ("iid", "dir", "class"):
+        parts = partition(labels, 10, method=method, unbalanced=True, seed=1)
+        assert len(parts) == 10
+        allidx = np.concatenate([p for p in parts if len(p)])
+        assert len(allidx) == len(np.unique(allidx))

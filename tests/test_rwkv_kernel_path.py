@@ -1,0 +1,52 @@
+"""RWKV6 time-mix with the Pallas kernel path (use_kernel=True, interpret)
+must match the pure-jnp chunked path end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.models import rwkv6 as rwkv_mod
+from repro.models.layers import init_params
+
+
+def test_time_mix_kernel_matches_jnp_path():
+    cfg = get_arch("rwkv6-1.6b", reduced=True)
+    defs = rwkv_mod.rwkv_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    B, S = 2, 128
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.5
+    H = cfg.d_model // cfg.rwkv_head_dim
+    s0 = jnp.zeros((B, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim))
+    x_prev = jnp.zeros((B, cfg.d_model))
+
+    out_jnp, last_jnp, sT_jnp = rwkv_mod.time_mix(
+        cfg, params["time"], x, x_prev, s0, use_kernel=False)
+    out_k, last_k, sT_k = rwkv_mod.time_mix(
+        cfg, params["time"], x, x_prev, s0, use_kernel=True)
+
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_jnp),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sT_k), np.asarray(sT_jnp),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_time_mix_decode_continues_training_state():
+    """Running time_mix over S tokens then decoding token S+1 must equal
+    running time_mix over S+1 tokens (state handoff correctness)."""
+    cfg = get_arch("rwkv6-1.6b", reduced=True)
+    defs = rwkv_mod.rwkv_defs(cfg)
+    params = init_params(defs, jax.random.PRNGKey(0))
+    B, S = 1, 65
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model)) * 0.5
+    H = cfg.d_model // cfg.rwkv_head_dim
+    s0 = jnp.zeros((B, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim))
+    x_prev = jnp.zeros((B, cfg.d_model))
+
+    out_full, _, _ = rwkv_mod.time_mix(cfg, params["time"], x, x_prev, s0)
+    out_pre, last, sT = rwkv_mod.time_mix(
+        cfg, params["time"], x[:, :-1], x_prev, s0)
+    out_dec, _, _ = rwkv_mod.time_mix_decode(
+        cfg, params["time"], x[:, -1:], last, sT)
+    np.testing.assert_allclose(np.asarray(out_dec[:, 0]),
+                               np.asarray(out_full[:, -1]),
+                               rtol=2e-3, atol=2e-3)

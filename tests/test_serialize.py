@@ -1,0 +1,50 @@
+"""Wire-protocol roundtrip properties (paper Fig. 4a Protocol tier)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.comm import serialize
+
+
+@given(hnp.arrays(dtype=st.sampled_from([np.float32, np.float64, np.int32,
+                                         np.int8, np.uint8, np.bool_]),
+                  shape=hnp.array_shapes(max_dims=4, max_side=16)))
+@settings(max_examples=40, deadline=None)
+def test_ndarray_roundtrip(arr):
+    out = serialize.loads(serialize.dumps(arr))
+    np.testing.assert_array_equal(out, arr)
+    assert out.dtype == arr.dtype
+
+
+def test_nested_pytree_roundtrip():
+    tree = {
+        "params": {"w": np.arange(12, dtype=np.float32).reshape(3, 4),
+                   "b": np.zeros(4, dtype=np.float32)},
+        "meta": {"round": 3, "lr": 0.1, "name": "client_0001",
+                 "tags": ["a", "b"], "tuple": (1, 2.5, "x")},
+        "flag": True,
+        "none": None,
+    }
+    out = serialize.loads(serialize.dumps(tree))
+    np.testing.assert_array_equal(out["params"]["w"], tree["params"]["w"])
+    assert out["meta"]["tuple"] == (1, 2.5, "x")
+    assert out["meta"]["round"] == 3
+    assert out["flag"] is True
+    assert out["none"] is None
+
+
+def test_jax_arrays_serializable():
+    import jax.numpy as jnp
+    tree = {"w": jnp.ones((8, 8), jnp.bfloat16) * 2}
+    out = serialize.loads(serialize.dumps(tree))
+    # bf16 roundtrips via its numpy extension dtype
+    assert out["w"].shape == (8, 8)
+    assert float(out["w"][0, 0]) == 2.0
+
+
+def test_message_bytes_tracks_size():
+    small = serialize.message_bytes({"w": np.zeros(10, np.float32)})
+    large = serialize.message_bytes({"w": np.zeros(1000, np.float32)})
+    assert large > small
+    assert large >= 4000

@@ -1,0 +1,70 @@
+"""Container-entrypoint services (repro.launch.service): a full multi-role
+deployment on localhost — registry + tracker + N clients + server — the
+paper's production topology (Fig. 4) end to end."""
+import json
+
+import pytest
+
+import repro as easyfl
+from repro.launch import service as svc
+
+
+@pytest.fixture(autouse=True)
+def _reset():
+    easyfl.reset()
+    yield
+    easyfl.reset()
+
+
+def test_full_deployment_topology():
+    cfg_json = json.dumps({
+        "model": "linear", "dataset": "synthetic",
+        "data": {"num_clients": 3, "batch_size": 32},
+        "server": {"rounds": 2, "clients_per_round": 2},
+        "client": {"local_epochs": 1, "lr": 0.1},
+    })
+    registry = svc.main(["registry", "--oneshot"])
+    tracker = svc.main(["tracker", "--oneshot"])
+    reg_addr = f"{registry.address[0]}:{registry.address[1]}"
+    trk_addr = f"{tracker.address[0]}:{tracker.address[1]}"
+    clients = []
+    try:
+        for i in range(3):
+            clients.append(svc.main([
+                "client", "--client-id", f"client_{i:04d}",
+                "--registry", reg_addr, "--config", cfg_json, "--oneshot"]))
+        # discovery sees all clients
+        names = sorted(r.client_id for r in
+                       svc.RemoteRegistry(svc._parse_addr(reg_addr)).list())
+        assert names == ["client_0000", "client_0001", "client_0002"]
+
+        server = svc.main(["server", "--registry", reg_addr,
+                           "--tracker", trk_addr, "--config", cfg_json,
+                           "--rounds", "2", "--oneshot"])
+        assert len(server.history) == 2
+        assert server.history[-1]["accuracy"] > 0.2
+        # remote tracking captured the rounds
+        rt = svc.RemoteTracker(svc._parse_addr(trk_addr))
+        series = rt.round_series(server.cfg.task_id, "accuracy")
+        assert len(series) == 2
+        rt.close()
+    finally:
+        for c in clients:
+            c.stop()
+        registry.stop()
+        tracker.stop()
+
+
+def test_registry_service_roundtrip():
+    registry = svc.main(["registry", "--oneshot"])
+    try:
+        rr = svc.RemoteRegistry(registry.address)
+        rr.register("cX", ("10.0.0.1", 5555), role="client")
+        assert rr.heartbeat("cX")
+        regs = rr.list()
+        assert regs[0].address == ("10.0.0.1", 5555)
+        rr.deregister("cX")
+        assert rr.list() == []
+        rr.close()
+    finally:
+        registry.stop()

@@ -1,0 +1,151 @@
+"""Tracking manager, service discovery, checkpointing, deployment
+manifests, transports."""
+import os
+import time
+
+import numpy as np
+import pytest
+import yaml
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.comm.transport import (
+    InProcessTransport, RPCServer, SocketTransport, parallel_requests,
+)
+from repro.deploy.discovery import Registor, Registry
+from repro.deploy.manifests import compose, dockerfile, k8s_manifests, write_artifacts
+from repro.tracking import Tracker
+
+
+# ---------------------------------------------------------------------------
+# tracking (paper §V-C: task -> round -> client)
+# ---------------------------------------------------------------------------
+
+
+def test_tracker_three_levels_and_queries():
+    t = Tracker()
+    t.create_task("t1", {"lr": 0.1})
+    for r in range(3):
+        t.track_round("t1", r, accuracy=0.5 + 0.1 * r, round_time=1.0)
+        for c in range(2):
+            t.track_client("t1", r, f"c{c}", loss=1.0 - 0.1 * r)
+    assert t.round_series("t1", "accuracy") == pytest.approx([0.5, 0.6, 0.7])
+    assert t.best_round("t1", "accuracy") == 2
+    assert len(t.client_series("t1", 1, "loss")) == 2
+    assert t.summary("t1")["rounds"] == 3
+
+
+def test_tracker_jsonl_persistence(tmp_path):
+    t = Tracker(backend="jsonl", out_dir=str(tmp_path))
+    t.create_task("t1", {})
+    t.track_round("t1", 0, accuracy=0.9)
+    t.track_client("t1", 0, "c0", loss=0.5)
+    t2 = Tracker.load_jsonl(str(tmp_path))
+    assert t2.round_series("t1", "accuracy") == pytest.approx([0.9])
+    assert t2.client_series("t1", 0, "loss")["c0"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# service discovery (paper Fig. 4b)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_register_lookup_deregister():
+    reg = Registry()
+    reg.register("c0", ("127.0.0.1", 5000), role="client")
+    assert reg.lookup("c0").address == ("127.0.0.1", 5000)
+    assert len(reg.list()) == 1
+    reg.deregister("c0")
+    assert reg.lookup("c0") is None
+
+
+def test_registry_ttl_expiry():
+    reg = Registry(default_ttl=0.05)
+    reg.register("c0", ("127.0.0.1", 5000))
+    assert reg.lookup("c0") is not None
+    time.sleep(0.08)
+    assert reg.lookup("c0") is None     # dropped out (paper: clients churn)
+    reg.register("c1", ("127.0.0.1", 5001))
+    assert reg.heartbeat("c1")
+    assert not reg.heartbeat("c0")
+
+
+def test_registry_watch_events():
+    reg = Registry()
+    events = []
+    reg.watch(lambda cid, r: events.append((cid, r is not None)))
+    reg.register("c0", ("h", 1))
+    reg.deregister("c0")
+    assert events == [("c0", True), ("c0", False)]
+
+
+def test_registor_registers_service():
+    reg = Registry()
+    r = Registor(reg)
+    r.register_service("c9", ("10.0.0.9", 1234), role="client")
+    assert reg.lookup("c9").metadata["role"] == "client"
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_and_gc(tmp_path):
+    d = str(tmp_path / "ckpt")
+    tree = {"w": np.arange(10, dtype=np.float32), "step": 7}
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, tree, s, keep=2)
+    assert latest_step(d) == 4
+    out = load_checkpoint(d)
+    np.testing.assert_array_equal(out["w"], tree["w"])
+    assert sorted(os.listdir(d)) == ["ckpt_00000003.msgpack",
+                                     "ckpt_00000004.msgpack"]
+
+
+# ---------------------------------------------------------------------------
+# deployment manifests
+# ---------------------------------------------------------------------------
+
+
+def test_manifests_structurally_valid(tmp_path):
+    assert "pip install" in dockerfile()
+    c = compose(num_clients=3, network_latency_ms=20)
+    assert len([s for s in c["services"] if s.startswith("client")]) == 3
+    assert "cap_add" in c["services"]["client0"]
+    ms = k8s_manifests(num_clients=5)
+    kinds = [m["kind"] for m in ms]
+    assert kinds.count("Deployment") == 2
+    client_dep = [m for m in ms if m["metadata"]["name"] == "easyfl-client"][0]
+    assert client_dep["spec"]["replicas"] == 5
+    env = client_dep["spec"]["template"]["spec"]["containers"][0]["env"]
+    assert any(e["name"] == "POD_IP" for e in env)   # downward-API registor
+    paths = write_artifacts(str(tmp_path), 2)
+    for p in paths:
+        assert os.path.exists(p)
+    with open(os.path.join(str(tmp_path), "k8s.yaml")) as f:
+        docs = list(yaml.safe_load_all(f))
+    assert len(docs) == 3
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+
+
+def test_inprocess_transport_serializes_both_ways():
+    tr = InProcessTransport(lambda m, p: {"echo": p["x"] * 2})
+    out = tr.request("f", {"x": np.ones(4, np.float32)})
+    np.testing.assert_array_equal(out["echo"], 2 * np.ones(4))
+    assert tr.stats.bytes_sent > 0 and tr.stats.bytes_received > 0
+
+
+def test_socket_transport_parallel_requests():
+    srv = RPCServer(lambda m, p: {"sq": p["x"] ** 2}).start()
+    try:
+        trs = [SocketTransport(srv.address) for _ in range(3)]
+        outs = parallel_requests(trs, "f", [{"x": i} for i in range(3)])
+        assert [o["sq"] for o in outs] == [0, 1, 4]
+        for t in trs:
+            t.close()
+    finally:
+        srv.stop()

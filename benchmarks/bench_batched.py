@@ -1,0 +1,103 @@
+"""Sequential vs batched client execution + streaming aggregation numbers.
+
+Measures, per cohort size N ∈ {10, 50, 100, 200}:
+
+* round wall time under ``resources.execution = "sequential"`` (one jitted
+  step dispatched per client per batch) vs ``"batched"`` (the whole cohort
+  as one vmapped+scanned program) — compile warm-up excluded;
+* FedAvg aggregation: jnp einsum oracle time and the chunked Pallas kernel's
+  peak VMEM block (TILE_N·TILE_D·4B, constant) vs the old full-stack block
+  (N·TILE_D·4B, linear in N).
+
+``collect()`` returns the numbers as a dict for ``benchmarks/run.py
+--json`` regression mode (checked by ``scripts/check_bench.py``).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+NS = (10, 50, 100, 200)
+
+
+def _make_trainer(execution: str, n: int):
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.core.server import Server
+    from repro.data.fed_data import build_federated_data
+    from repro.models.registry import get_model
+
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": n, "batch_size": 32},
+        "server": {"rounds": 2, "clients_per_round": n, "test_every": 0},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "resources": {"execution": execution},
+        "tracking": {"enabled": False},
+    })
+    model = get_model(cfg.model)
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(cfg.seed))
+    return trainer
+
+
+def _round_time(execution: str, n: int) -> float:
+    trainer = _make_trainer(execution, n)
+    trainer.run_round(0)                      # warm-up (compile)
+    t0 = time.perf_counter()
+    trainer.run_round(1)
+    return time.perf_counter() - t0
+
+
+def _aggregation_times(n: int, d: int = 50_000) -> Dict[str, float]:
+    from repro.core.aggregation import weighted_average, fedavg_weights
+    rng = np.random.RandomState(n)
+    updates = [{"w": rng.randn(d).astype(np.float32)} for _ in range(n)]
+    w = fedavg_weights([1] * n)
+    out = weighted_average(updates, w)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    jax.block_until_ready(weighted_average(updates, w))
+    return {"agg_einsum_s": time.perf_counter() - t0}
+
+
+def collect(ns: Iterable[int] = NS) -> Dict[str, Dict]:
+    from repro.kernels.fedavg_agg import TILE_D, TILE_N, bucket_clients
+    out: Dict[str, Dict] = {"sequential": {}, "batched": {}, "aggregation": {}}
+    for n in ns:
+        seq = _round_time("sequential", n)
+        bat = _round_time("batched", n)
+        out["sequential"][str(n)] = seq
+        out["batched"][str(n)] = bat
+        agg = _aggregation_times(n)
+        agg["kernel_peak_block_bytes"] = TILE_N * TILE_D * 4
+        agg["full_stack_block_bytes"] = bucket_clients(n) * TILE_D * 4
+        out["aggregation"][str(n)] = agg
+    return out
+
+
+def main() -> None:
+    data = collect()
+    rows = []
+    for n in sorted(data["sequential"], key=int):
+        seq = data["sequential"][n]
+        bat = data["batched"][n]
+        rows.append((f"roundtime_sequential_s_N{n}", seq, ""))
+        rows.append((f"roundtime_batched_s_N{n}", bat,
+                     f"{seq / bat:.1f}x faster"))
+        agg = data["aggregation"][n]
+        rows.append((f"agg_einsum_s_N{n}", agg["agg_einsum_s"], ""))
+        rows.append((f"agg_kernel_peak_block_bytes_N{n}",
+                     agg["kernel_peak_block_bytes"],
+                     f"vs {agg['full_stack_block_bytes']} full-stack"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,16 @@
 """Benchmark driver: one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig5,tab4,...]
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_roundtime.json
 
 Prints ``name,value,derived`` CSV rows (value units are in each name).
+``--json`` runs the sequential/batched round-time + aggregation regression
+suite and writes the numbers to the given path for ``scripts/check_bench.py``.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -23,15 +27,32 @@ BENCHES = [
     ("fedreid", "benchmarks.bench_fedreid", "Fig. 9: FedReID case study"),
     ("compression", "benchmarks.bench_compression",
      "STC/int8 compression (Table V support)"),
+    ("roundtime", "benchmarks.bench_batched",
+     "Sequential vs batched execution + streaming aggregation"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline table from dry-run"),
 ]
+
+
+def run_json(path: str) -> None:
+    """Regression mode: emit sequential/batched round-time + aggregation
+    numbers as JSON (consumed by scripts/check_bench.py)."""
+    from benchmarks import bench_batched
+    data = bench_batched.collect()
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+    print(f"# wrote {path}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated bench keys to run")
+    ap.add_argument("--json", default="", metavar="BENCH_roundtime.json",
+                    help="write round-time regression numbers to PATH and exit")
     args = ap.parse_args()
+    if args.json:
+        run_json(args.json)
+        return
     only = {s.strip() for s in args.only.split(",") if s.strip()}
 
     print("name,value,derived")

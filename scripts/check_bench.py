@@ -1,0 +1,53 @@
+"""Regression gate for the batched execution engine.
+
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_roundtime.json
+    python scripts/check_bench.py BENCH_roundtime.json
+
+Fails (exit 1) if batched round time is not faster than sequential at any
+cohort size N >= 50 — the scaling regime the engine exists for.  Small
+cohorts are reported but not gated (dispatch overhead there is noise-level).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+GATE_MIN_N = 50
+
+
+def check(data: dict) -> int:
+    failures = 0
+    for n in sorted(data.get("sequential", {}), key=int):
+        seq = data["sequential"][n]
+        bat = data["batched"].get(n)
+        if bat is None:
+            print(f"N={n}: missing batched number")
+            failures += 1
+            continue
+        speedup = seq / bat if bat else float("inf")
+        gated = int(n) >= GATE_MIN_N
+        status = "ok" if bat < seq else ("FAIL" if gated else "warn")
+        print(f"N={n}: sequential={seq:.4f}s batched={bat:.4f}s "
+              f"({speedup:.1f}x) [{status}]")
+        if gated and bat >= seq:
+            failures += 1
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("json_path", help="output of benchmarks.run --json")
+    args = ap.parse_args()
+    with open(args.json_path) as f:
+        data = json.load(f)
+    failures = check(data)
+    if failures:
+        print(f"{failures} regression(s): batched not faster than sequential "
+              f"at N >= {GATE_MIN_N}")
+        sys.exit(1)
+    print("check_bench: ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,6 @@
-from repro.comm.serialize import dumps, loads, message_bytes  # noqa: F401
+from repro.comm.serialize import (  # noqa: F401
+    array_nbytes, dumps, estimate_message_bytes, loads, message_bytes,
+)
 from repro.comm.transport import (  # noqa: F401
     InProcessTransport, RPCServer, SocketTransport, Transport,
     parallel_requests,

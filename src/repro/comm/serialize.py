@@ -4,10 +4,16 @@ The original uses Protocol Buffers over gRPC; here the wire format is
 msgpack with a compact ndarray encoding (dtype, shape, raw bytes) — the same
 role: a deterministic, language-agnostic message body for model parameters,
 gradients, and control messages.
+
+Size accounting: ``message_bytes`` (exact, serializes) is the oracle for
+``estimate_message_bytes`` (O(num_leaves): msgpack header arithmetic +
+``nbytes`` per array, no serialization).  Remote round accounting
+(``core/remote.py``) and the dense cases of ``compression.payload_bytes``
+go through this machinery, so tracking a 100-client round never re-packs
+100 models.
 """
 from __future__ import annotations
 
-import io
 from typing import Any
 
 import msgpack
@@ -54,9 +60,12 @@ def _encode(obj):
 def _decode(obj):
     if isinstance(obj, dict):
         if obj.get(_NDARRAY):
+            # bytearray gives a writable buffer, so frombuffer yields a
+            # writable array directly — one copy total instead of the
+            # frombuffer(...).copy() double allocation per received model.
             return np.frombuffer(
-                obj["b"], dtype=_resolve_dtype(obj["d"])
-            ).reshape(obj["s"]).copy()
+                bytearray(obj["b"]), dtype=_resolve_dtype(obj["d"])
+            ).reshape(obj["s"])
         if _TUPLE in obj:
             return tuple(_decode(x) for x in obj[_TUPLE])
         return {k: _decode(v) for k, v in obj.items()}
@@ -74,5 +83,94 @@ def loads(data: bytes) -> Any:
 
 
 def message_bytes(tree: Any) -> int:
-    """Size of a serialized message (communication-cost tracking)."""
+    """Exact size of a serialized message (the estimator's test oracle)."""
     return len(dumps(tree))
+
+
+# ---------------------------------------------------------------------------
+# O(num_leaves) size estimation — no serialization, no data copies
+# ---------------------------------------------------------------------------
+
+
+def array_nbytes(arr) -> int:
+    """Raw payload bytes of an array-like (numpy or jax) without copying."""
+    size = 1
+    for d in arr.shape:
+        size *= int(d)
+    return size * np.dtype(arr.dtype).itemsize
+
+
+def _str_bytes(s: str) -> int:
+    n = len(s.encode())
+    if n < 32:
+        return 1 + n           # fixstr
+    if n < 256:
+        return 2 + n           # str8
+    if n < 2**16:
+        return 3 + n           # str16
+    return 5 + n               # str32
+
+
+def _bin_bytes(n: int) -> int:
+    if n < 256:
+        return 2 + n           # bin8
+    if n < 2**16:
+        return 3 + n           # bin16
+    return 5 + n               # bin32
+
+
+def _container_header(n: int) -> int:
+    return 1 if n < 16 else (3 if n < 2**16 else 5)  # fixmap/map16/map32
+
+
+def _int_bytes(v: int) -> int:
+    if -32 <= v < 128:
+        return 1
+    if 0 <= v < 256 or -128 <= v < 0:
+        return 2
+    if 0 <= v < 2**16 or -2**15 <= v < 0:
+        return 3
+    if 0 <= v < 2**32 or -2**31 <= v < 0:
+        return 5
+    return 9
+
+
+def _array_header_bytes(arr) -> int:
+    """msgpack size of the ndarray wrapper map, minus the raw data."""
+    header = _container_header(4)                      # 4-key map
+    header += _str_bytes(_NDARRAY) + 1                 # "__nd__": True
+    header += _str_bytes("d") + _str_bytes(_dtype_tag(np.dtype(arr.dtype)))
+    header += _str_bytes("s") + _container_header(len(arr.shape)) + sum(
+        _int_bytes(int(d)) for d in arr.shape)
+    header += _str_bytes("b") + _bin_bytes(array_nbytes(arr)) - array_nbytes(arr)
+    return header
+
+
+def estimate_message_bytes(obj: Any) -> int:
+    """Serialized size of a pytree in O(num_leaves) — byte-exact for the
+    encodings ``dumps`` emits, without materializing any buffer."""
+    if isinstance(obj, np.ndarray) or (
+            hasattr(obj, "dtype") and hasattr(obj, "shape")):
+        return _array_header_bytes(obj) + array_nbytes(obj)
+    if isinstance(obj, tuple):
+        return (_container_header(1) + _str_bytes(_TUPLE)
+                + _container_header(len(obj))
+                + sum(estimate_message_bytes(x) for x in obj))
+    if isinstance(obj, list):
+        return _container_header(len(obj)) + sum(
+            estimate_message_bytes(x) for x in obj)
+    if isinstance(obj, dict):
+        return _container_header(len(obj)) + sum(
+            estimate_message_bytes(k) + estimate_message_bytes(v)
+            for k, v in obj.items())
+    if isinstance(obj, bool) or obj is None:
+        return 1
+    if isinstance(obj, (int, np.integer)):
+        return _int_bytes(int(obj))
+    if isinstance(obj, (float, np.floating)):
+        return 9               # float64
+    if isinstance(obj, str):
+        return _str_bytes(obj)
+    if isinstance(obj, (bytes, bytearray)):
+        return _bin_bytes(len(obj))
+    raise TypeError(f"cannot estimate size of {type(obj).__name__}")

@@ -28,17 +28,16 @@ def weighted_average(updates: List[PyTree], weights: np.ndarray,
     weights = jnp.asarray(weights, jnp.float32)
 
     if use_kernel:
+        from jax.flatten_util import ravel_pytree
         from repro.kernels import ops as kops
-        flats = [jax.flatten_util.ravel_pytree(u)[0] for u in updates]
-        unravel = jax.flatten_util.ravel_pytree(updates[0])[1]
+        flats = [ravel_pytree(u)[0] for u in updates]
+        unravel = ravel_pytree(updates[0])[1]
         stacked = jnp.stack(flats)               # (N, D)
         return unravel(kops.fedavg_aggregate(stacked, weights))
 
     def avg(*leaves):
-        acc = leaves[0].astype(jnp.float32) * weights[0]
-        for w, leaf in zip(weights[1:], leaves[1:]):
-            acc = acc + leaf.astype(jnp.float32) * w
-        return acc
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        return jnp.einsum("n,n...->...", weights, stacked)
 
     return jax.tree_util.tree_map(avg, *updates)
 

@@ -127,8 +127,11 @@ def payload_bytes(tree: PyTree) -> int:
     """Wire size of a (possibly compressed) update.
 
     STC wire format (per Sattler et al.): nnz * (4-byte index + 1 sign bit)
-    + one float mean; int8: 1 byte/elem + scale; dense: dtype bytes.
+    + one float mean; int8: 1 byte/elem + scale; dense: dtype bytes.  Dense
+    sizes go through ``serialize.array_nbytes`` — O(1) per leaf, no
+    serialization — so round accounting stays O(num_leaves).
     """
+    from repro.comm.serialize import array_nbytes
     total = 0
     for leaf in jax.tree_util.tree_leaves(tree, is_leaf=_is_leaf):
         if isinstance(leaf, CompressedTensor):
@@ -138,9 +141,9 @@ def payload_bytes(tree: PyTree) -> int:
             elif leaf.kind == "int8":
                 total += int(np.prod(leaf.data.shape)) + 4
             else:
-                total += leaf.data.size * leaf.data.dtype.itemsize
+                total += array_nbytes(leaf.data)
         else:
-            total += leaf.size * leaf.dtype.itemsize
+            total += array_nbytes(leaf)
     return total
 
 

@@ -155,13 +155,33 @@ class SystemHeterogeneityConfig:
 
 @dataclass(frozen=True)
 class ResourceConfig:
-    """Distributed-training optimization (paper §VI)."""
+    """Distributed-training optimization (paper §VI).
+
+    ``execution`` selects the client execution engine:
+
+    * ``"sequential"`` — one jitted train step dispatched per client per
+      batch from Python (the reference path; supports per-client ``train``
+      stage overrides).
+    * ``"batched"`` — the whole selected cohort runs as one jitted program
+      (``jax.vmap`` over clients around a ``lax.scan`` over local steps, see
+      ``repro.core.batched``).  Round wall time stops scaling with cohort
+      size; per-client virtual times are derived from step counts scaled by
+      the measured per-step cost.  Requires a uniform batch size and
+      optimizer across the cohort; custom ``train``-stage overrides are not
+      consulted (compression/encryption/upload overrides still are).
+
+    ``aggregation_kernel`` switches the FedAvg weighted average onto the
+    chunked streaming Pallas kernel (``repro.kernels.fedavg_agg``); the
+    default jnp einsum path is its oracle.
+    """
 
     num_devices: int = 1              # M simulated accelerators
     allocation: str = "greedy_ada"    # greedy_ada | random | slowest | one_per_device
     default_client_time: float = 1.0  # t: default training time before profiling
     momentum: float = 0.5             # m: moving-average momentum for t update
     distributed: bool = False         # use jax device mesh when available
+    execution: str = "sequential"     # sequential | batched
+    aggregation_kernel: bool = False  # FedAvg via the Pallas streaming kernel
 
 
 @dataclass(frozen=True)

@@ -107,6 +107,8 @@ class RemoteServer:
         metrics = {
             "round_time": dist_latency,
             "clients": len(selected),
+            "comm_down_bytes": _wire_bytes(wire) * len(selected),
+            "comm_up_bytes": sum(_wire_bytes(r) for r in results),
             "train_loss": float(np.mean([r["metrics"]["loss"]
                                          for r in results])),
         }
@@ -129,3 +131,15 @@ def _to_numpy(tree):
     import jax
     return jax.tree_util.tree_map(
         lambda x: np.asarray(x) if hasattr(x, "dtype") else x, tree)
+
+
+def _wire_bytes(tree) -> int:
+    """O(num_leaves) message-size accounting: no re-serialization per round.
+
+    Falls back to the compression-aware tensor accounting for trees the
+    estimator does not model (e.g. CompressedTensor leaves)."""
+    from repro.comm.serialize import estimate_message_bytes
+    try:
+        return estimate_message_bytes(tree)
+    except TypeError:
+        return comp.payload_bytes(tree)

@@ -21,6 +21,7 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core.batched import BatchedExecutor
 from repro.core.client import Client
 from repro.core.config import Config
 from repro.core.server import Server
@@ -46,6 +47,12 @@ class Trainer:
         self.server = server or Server(model, config, fed_data.test)
         self.client_cls = client_cls
         self.clients: Dict[str, Client] = {}
+        if config.resources.execution not in ("sequential", "batched"):
+            raise ValueError(
+                f"unknown execution {config.resources.execution!r}; "
+                f"expected 'sequential' or 'batched'")
+        self.engine = (BatchedExecutor(model)
+                       if config.resources.execution == "batched" else None)
         self.het = SystemHeterogeneity(config.system_heterogeneity)
         self.scheduler = GreedyAda(
             num_devices=max(1, config.resources.num_devices),
@@ -76,6 +83,37 @@ class Trainer:
         raise ValueError(f"unknown allocation {name!r}")
 
     # ------------------------------------------------------------------
+    def _run_batched(self, selected: List[str], payload: Dict[str, Any],
+                     round_id: int) -> List[Dict[str, Any]]:
+        """Train the whole cohort in one compiled program, then run each
+        client's post-train stages (compression/encryption/upload) so
+        strategy overrides like STC keep working.
+
+        The pre-train stages run ONCE for the cohort (all clients receive
+        the same payload), through the first client's download/decompression
+        so uniform stage overrides are honored; heterogeneous pre-train or
+        ``train`` overrides cannot be vectorized and raise instead of
+        silently diverging."""
+        clients = [self.client(c) for c in selected]
+        for stage in ("download", "decompression", "train"):
+            impls = {getattr(type(c), stage) for c in clients}
+            if len(impls) > 1 or (stage == "train"
+                                  and impls != {Client.train}):
+                raise ValueError(
+                    f"batched execution cannot vectorize per-client "
+                    f"{stage!r} overrides ({[type(c).__name__ for c in clients]}); "
+                    f"use resources.execution='sequential'")
+        global_params = clients[0].decompression(clients[0].download(payload))
+        raw = self.engine.run_cohort(clients, global_params, round_id)
+        results = []
+        for client, res in zip(clients, raw):
+            res = client.compression(res)
+            res = client.encryption(res)
+            res["client_id"] = client.client_id
+            results.append(client.upload(res))
+        return results
+
+    # ------------------------------------------------------------------
     def run_round(self, round_id: int) -> Dict[str, float]:
         server = self.server
         selected = server.selection(self.fed_data.client_ids, round_id)
@@ -86,14 +124,23 @@ class Trainer:
         t_wall0 = time.perf_counter()
         down_bytes = payload.get("payload_bytes", 0) * len(selected)
         up_bytes = 0
-        for group in groups:
-            for cid in group:
-                res = self.client(cid).run_round(payload, round_id)
-                results.append(res)
+        if self.engine is not None:
+            results = self._run_batched(selected, payload, round_id)
+            for res in results:
+                cid = res["client_id"]
                 wall_times[cid] = res["train_time"]
                 sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
                 up_bytes += res.get(
                     "payload_bytes", comp.payload_bytes(res["update"]))
+        else:
+            for group in groups:
+                for cid in group:
+                    res = self.client(cid).run_round(payload, round_id)
+                    results.append(res)
+                    wall_times[cid] = res["train_time"]
+                    sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
+                    up_bytes += res.get(
+                        "payload_bytes", comp.payload_bytes(res["update"]))
 
         # Eq. 1 makespan under the virtual clock
         round_virtual = max(

@@ -52,7 +52,8 @@ class Server:
         updates = [comp.decompress(r["update"]) for r in results]
         counts = [r["num_samples"] for r in results]
         agg = get_aggregator(self.cfg.server.aggregation)
-        self.params = agg(self.params, updates, counts)
+        self.params = agg(self.params, updates, counts,
+                          use_kernel=self.cfg.resources.aggregation_kernel)
 
     # ------------------------------------------------------------------
     def test(self) -> Dict[str, float]:

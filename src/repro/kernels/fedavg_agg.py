@@ -1,59 +1,110 @@
-"""FedAvg aggregation Pallas kernel: weighted sum over N client updates.
+"""FedAvg aggregation Pallas kernel: chunked streaming weighted sum.
 
 The aggregation stage touches every parameter of every selected client once
 per round — a pure memory-bound streaming reduction.  TPU mapping: the
-flattened update matrix (N clients × D params) is tiled along D; each grid
-step loads an (N, TILE_D) block into VMEM and contracts it against the
-weight vector on the MXU:
+flattened update matrix (N clients × D params) is tiled along *both* axes
+with a 2-D grid ``(D-tiles × client-chunks)``; each grid step loads one
+(TILE_N, TILE_D) block into VMEM and accumulates its contribution into the
+output tile on the MXU:
 
-    out[tile] = w @ updates[:, tile]          # (1,N) x (N,TILE_D)
+    out[tile_d] += w[chunk] @ updates[chunk, tile_d]   # (1,TILE_N)x(TILE_N,TILE_D)
 
-TILE_D = 2048 keeps the block N·TILE_D·4B ≲ 1.6 MB in VMEM for N ≤ 200
-selected clients (paper experiments use 10-100) and the lane dim a multiple
-of 128 for the MXU.
+The client-chunk axis is the fastest grid dimension, so all chunks of one
+D-tile revisit the same output block consecutively (the standard Pallas
+accumulate pattern: zero the tile at chunk 0, ``+=`` afterwards).  Peak VMEM
+is therefore TILE_N·TILE_D·4B (≈64 KB) regardless of cohort size, instead of
+the previous N·TILE_D block that grew linearly with N.
+
+N is padded up to a *bucket* (powers of two × TILE_N) with zero weights and
+zero rows before the jitted inner call, so per-round cohort-size jitter
+(e.g. 97, 100, 103 selected clients) hits one compiled program instead of
+recompiling every round.  Zero-padding leaves the weighted sum unchanged and
+keeps the weight total at 1.
 """
 from __future__ import annotations
 
 import functools
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 TILE_D = 2048
+TILE_N = 8
+
+
+def bucket_clients(n: int, tile_n: int = TILE_N) -> int:
+    """Smallest power-of-two multiple of ``tile_n`` that holds ``n`` rows."""
+    b = tile_n
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_cohort(updates: jnp.ndarray, weights: jnp.ndarray,
+               tile_n: int = TILE_N) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Zero-pad (N, D) updates + (N,) weights up to the N bucket.
+
+    Padded rows carry weight 0, so the weighted sum — and the total weight —
+    are unchanged.
+    """
+    n = updates.shape[0]
+    nb = bucket_clients(n, tile_n)
+    if nb == n:
+        return updates, weights
+    return (jnp.pad(updates, ((0, nb - n), (0, 0))),
+            jnp.pad(weights, (0, nb - n)))
 
 
 def _agg_kernel(w_ref, u_ref, o_ref):
-    w = w_ref[...]                     # (1, N) f32
-    u = u_ref[...]                     # (N, TILE_D) f32
-    o_ref[...] = jax.lax.dot_general(
+    j = pl.program_id(1)               # client-chunk index (fastest dim)
+
+    @pl.when(j == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...]                     # (1, TILE_N) f32
+    u = u_ref[...]                     # (TILE_N, TILE_D) f32
+    o_ref[...] += jax.lax.dot_general(
         w, u, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def fedavg_aggregate(updates: jnp.ndarray, weights: jnp.ndarray,
-                     interpret: bool = True) -> jnp.ndarray:
-    """updates: (N, D) f32; weights: (N,) summing to 1 -> (D,) f32.
-
-    ``interpret=True`` executes the kernel body on CPU (this container);
-    on TPU pass interpret=False for the compiled kernel.
-    """
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "tile_d", "tile_n"))
+def _aggregate_padded(updates: jnp.ndarray, weights: jnp.ndarray,
+                      interpret: bool, tile_d: int, tile_n: int) -> jnp.ndarray:
     N, D = updates.shape
-    pad = (-D) % TILE_D
+    pad = (-D) % tile_d
     if pad:
         updates = jnp.pad(updates, ((0, 0), (0, pad)))
     Dp = D + pad
     out = pl.pallas_call(
         _agg_kernel,
-        grid=(Dp // TILE_D,),
+        grid=(Dp // tile_d, N // tile_n),
         in_specs=[
-            pl.BlockSpec((1, N), lambda i: (0, 0)),
-            pl.BlockSpec((N, TILE_D), lambda i: (0, i)),
+            pl.BlockSpec((1, tile_n), lambda i, j: (0, j)),
+            pl.BlockSpec((tile_n, tile_d), lambda i, j: (j, i)),
         ],
-        out_specs=pl.BlockSpec((1, TILE_D), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, tile_d), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Dp), jnp.float32),
         interpret=interpret,
     )(weights.reshape(1, N).astype(jnp.float32),
       updates.astype(jnp.float32))
     return out[0, :D]
+
+
+def fedavg_aggregate(updates: jnp.ndarray, weights: jnp.ndarray,
+                     interpret: bool = True, tile_d: int = TILE_D,
+                     tile_n: int = TILE_N) -> jnp.ndarray:
+    """updates: (N, D); weights: (N,) summing to 1 -> (D,) f32.
+
+    ``interpret=True`` executes the kernel body on CPU (this container);
+    on TPU pass interpret=False for the compiled kernel.  N is bucket-padded
+    *outside* the jitted inner function so varying per-round cohort sizes
+    within one bucket reuse a single compiled program.
+    """
+    updates, weights = pad_cohort(updates.astype(jnp.float32),
+                                  weights.astype(jnp.float32), tile_n)
+    return _aggregate_padded(updates, weights, interpret, tile_d, tile_n)

@@ -1,43 +1,61 @@
 """Jit'd public wrappers for the Pallas kernels.
 
 ``interpret`` defaults to True because this container is CPU-only; on real
-TPU hardware set ``REPRO_KERNEL_INTERPRET=0`` (or pass interpret=False) to
-run the compiled kernels.
+TPU hardware set ``REPRO_KERNEL_INTERPRET=0`` (or pass interpret=False, or
+call :func:`set_interpret`) to run the compiled kernels.  The env flag is
+re-read on every call so tests/benchmarks can toggle compiled vs interpret
+mode without reloading the module.
 """
 from __future__ import annotations
 
 import os
+from typing import Optional
 
 import jax.numpy as jnp
 
 from repro.kernels import fedavg_agg, quant, rwkv6_scan, stc_topk
 
-_INTERPRET = os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
+# Process-wide override installed via set_interpret(); None defers to the env.
+_OVERRIDE: Optional[bool] = None
+
+
+def set_interpret(mode: Optional[bool]) -> None:
+    """Force interpret mode on/off for all kernel calls; None -> env flag."""
+    global _OVERRIDE
+    _OVERRIDE = mode
+
+
+def get_interpret(interpret: Optional[bool] = None) -> bool:
+    """Resolve the effective interpret flag for one call.
+
+    Per-call argument beats the set_interpret() override beats the
+    REPRO_KERNEL_INTERPRET env var (read per call, not at import).
+    """
+    if interpret is not None:
+        return interpret
+    if _OVERRIDE is not None:
+        return _OVERRIDE
+    return os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
 
 
 def fedavg_aggregate(updates, weights, interpret: bool = None):
     return fedavg_agg.fedavg_aggregate(
-        updates, weights,
-        interpret=_INTERPRET if interpret is None else interpret)
+        updates, weights, interpret=get_interpret(interpret))
 
 
 def stc_compress(x, keep_frac: float = 0.01, interpret: bool = None):
-    return stc_topk.stc_compress(
-        x, keep_frac, interpret=_INTERPRET if interpret is None else interpret)
+    return stc_topk.stc_compress(x, keep_frac, interpret=get_interpret(interpret))
 
 
 def quantize(x, interpret: bool = None):
-    return quant.quantize(
-        x, interpret=_INTERPRET if interpret is None else interpret)
+    return quant.quantize(x, interpret=get_interpret(interpret))
 
 
 def dequantize(q, s, shape, dtype=jnp.float32, interpret: bool = None):
     return quant.dequantize(
-        q, s, tuple(shape), dtype,
-        interpret=_INTERPRET if interpret is None else interpret)
+        q, s, tuple(shape), dtype, interpret=get_interpret(interpret))
 
 
 def wkv6(r, k, v, logw, u, s0, interpret: bool = None):
     return rwkv6_scan.wkv6(
-        r, k, v, logw, u, s0,
-        interpret=_INTERPRET if interpret is None else interpret)
+        r, k, v, logw, u, s0, interpret=get_interpret(interpret))

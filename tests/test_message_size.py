@@ -1,0 +1,60 @@
+"""O(num_leaves) message-size estimator vs the serializing oracle, and the
+copy-free ndarray decode path."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.comm import serialize
+
+
+def _trees():
+    rng = np.random.RandomState(0)
+    yield {"w": np.zeros(10, np.float32)}
+    yield {"w": rng.randn(300, 17).astype(np.float64),
+           "b": np.arange(5, dtype=np.int8)}
+    yield {"params": {"w": rng.randn(3, 4).astype(np.float32),
+                      "b": np.zeros(4, np.float32)},
+           "meta": {"round": 3, "lr": 0.1, "name": "client_0001",
+                    "tags": ["a", "b"], "tuple": (1, 2.5, "x")},
+           "flag": True, "none": None}
+    yield [np.ones((64, 64), np.float32), {"nested": (np.int32(7),)}]
+    yield {"bf16": jnp.ones((8, 8), jnp.bfloat16) * 2}
+    yield {"big": np.zeros(100_000, np.float32)}     # bin32 header regime
+    yield {"scalar": np.float32(1.5), "neg": -7, "large": 2**40}
+    yield {1: "a", 300: [2.5], -7: None}             # non-str map keys
+
+
+def test_estimator_matches_dumps_exactly():
+    for tree in _trees():
+        est = serialize.estimate_message_bytes(tree)
+        exact = serialize.message_bytes(tree)
+        assert est == exact, (est, exact, tree)
+
+
+def test_estimator_does_not_serialize_scaling():
+    """Estimator output is dominated by nbytes, not by walking data."""
+    small = serialize.estimate_message_bytes({"w": np.zeros(10, np.float32)})
+    large = serialize.estimate_message_bytes({"w": np.zeros(1000, np.float32)})
+    assert large > small
+    assert large >= 4000
+
+
+def test_array_nbytes():
+    assert serialize.array_nbytes(np.zeros((3, 4), np.float32)) == 48
+    assert serialize.array_nbytes(jnp.zeros((2, 2), jnp.bfloat16)) == 8
+
+
+def test_decode_returns_writable_no_copy():
+    arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+    out = serialize.loads(serialize.dumps({"w": arr}))["w"]
+    np.testing.assert_array_equal(out, arr)
+    assert out.flags.writeable                # bytearray-backed, no .copy()
+    out[0, 0] = 99.0                          # mutation must not raise
+    assert out[0, 0] == 99.0
+
+
+def test_roundtrip_preserves_dtype_and_shape():
+    for dt in (np.float32, np.float64, np.int32, np.int8, np.uint8, np.bool_):
+        arr = (np.arange(24) % 2).astype(dt).reshape(2, 3, 4)
+        out = serialize.loads(serialize.dumps(arr))
+        np.testing.assert_array_equal(out, arr)
+        assert out.dtype == arr.dtype

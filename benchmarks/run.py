@@ -29,6 +29,8 @@ BENCHES = [
      "STC/int8 compression (Table V support)"),
     ("roundtime", "benchmarks.bench_batched",
      "Sequential vs batched execution + streaming aggregation"),
+    ("distributed", "benchmarks.bench_distributed",
+     "Mesh-sharded cohort (resources.distributed) per-shard round times"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline table from dry-run"),
 ]
 

@@ -1,4 +1,6 @@
-"""Regression gate for the batched execution engine.
+"""Regression gates: benchmark numbers and the failing-test baseline.
+
+Benchmark mode (batched execution engine):
 
     PYTHONPATH=src python -m benchmarks.run --json BENCH_roundtime.json
     python scripts/check_bench.py BENCH_roundtime.json
@@ -6,14 +8,65 @@
 Fails (exit 1) if batched round time is not faster than sequential at any
 cohort size N >= 50 — the scaling regime the engine exists for.  Small
 cohorts are reported but not gated (dispatch overhead there is noise-level).
+
+Test-baseline mode ("no worse than seed", mechanically):
+
+    python scripts/check_bench.py --tests            # gate vs recorded count
+    python scripts/check_bench.py --tests --update   # re-record the baseline
+
+Runs the tier-1 suite and fails if the failure count exceeds the count
+recorded in ``scripts/test_baseline.json`` (seed had 29 failures; the
+mesh-API + HLO-analyzer fixes brought it to 0).  ``--update`` rewrites the
+baseline after an intentional change.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import re
+import subprocess
 import sys
 
 GATE_MIN_N = 50
+
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "test_baseline.json")
+
+
+def check_tests(update: bool = False) -> int:
+    """Run the tier-1 suite; gate the failure count against the baseline."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "--tb=no",
+         "-p", "no:cacheprovider"],
+        cwd=root, env=env, capture_output=True, text=True)
+    tail = (r.stdout.strip().splitlines() or [""])[-1]
+    failed = int(m.group(1)) if (m := re.search(r"(\d+) failed", tail)) else 0
+    passed = int(m.group(1)) if (m := re.search(r"(\d+) passed", tail)) else 0
+    errors = int(m.group(1)) if (m := re.search(r"(\d+) error", tail)) else 0
+    failed += errors
+    print(f"tier-1: {passed} passed, {failed} failed ({tail})")
+    if passed == 0 and failed == 0:
+        print("could not parse pytest summary; treating as failure")
+        return 1
+    if update:
+        with open(BASELINE_PATH, "w") as f:
+            json.dump({"max_failed": failed}, f, indent=1)
+        print(f"baseline updated: max_failed={failed}")
+        return 0
+    baseline = 0
+    if os.path.exists(BASELINE_PATH):
+        with open(BASELINE_PATH) as f:
+            baseline = json.load(f).get("max_failed", 0)
+    if failed > baseline:
+        print(f"REGRESSION: {failed} failures > baseline {baseline}")
+        return 1
+    print(f"check_bench --tests: ok ({failed} <= baseline {baseline})")
+    return 0
 
 
 def check(data: dict) -> int:
@@ -37,8 +90,17 @@ def check(data: dict) -> int:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("json_path", help="output of benchmarks.run --json")
+    ap.add_argument("json_path", nargs="?",
+                    help="output of benchmarks.run --json")
+    ap.add_argument("--tests", action="store_true",
+                    help="gate the tier-1 failure count vs the baseline")
+    ap.add_argument("--update", action="store_true",
+                    help="with --tests: re-record the baseline count")
     args = ap.parse_args()
+    if args.tests:
+        sys.exit(check_tests(update=args.update))
+    if not args.json_path:
+        ap.error("json_path required unless --tests")
     with open(args.json_path) as f:
         data = json.load(f)
     failures = check(data)

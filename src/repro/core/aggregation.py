@@ -22,6 +22,18 @@ def fedavg_weights(num_samples: Sequence[int]) -> np.ndarray:
     return (w / w.sum()).astype(np.float32)
 
 
+def weighted_train_loss(results: List[Dict]) -> float:
+    """num_samples-weighted cohort loss — FedAvg semantics, shared by the
+    local and remote runtimes (an unweighted mean over-counts tiny clients
+    under unbalanced cohorts)."""
+    counts = np.asarray([r.get("num_samples", 1) for r in results],
+                        np.float64)
+    losses = np.asarray([r["metrics"]["loss"] for r in results], np.float64)
+    if counts.sum() <= 0:
+        return float(np.mean(losses))
+    return float(losses @ (counts / counts.sum()))
+
+
 def weighted_average(updates: List[PyTree], weights: np.ndarray,
                      use_kernel: bool = False) -> PyTree:
     """Weighted mean over a list of pytrees (equal structure)."""
@@ -42,14 +54,20 @@ def weighted_average(updates: List[PyTree], weights: np.ndarray,
     return jax.tree_util.tree_map(avg, *updates)
 
 
+def apply_delta(global_params: PyTree, delta: PyTree,
+                server_lr: float = 1.0) -> PyTree:
+    """Apply an aggregated update delta to the global params."""
+    return jax.tree_util.tree_map(
+        lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
+        global_params, delta)
+
+
 def fedavg(global_params: PyTree, updates: List[PyTree],
            num_samples: Sequence[int], use_kernel: bool = False,
            server_lr: float = 1.0) -> PyTree:
     """Apply the weighted-average *update* (delta) to the global params."""
     delta = weighted_average(updates, fedavg_weights(num_samples), use_kernel)
-    return jax.tree_util.tree_map(
-        lambda p, d: (p.astype(jnp.float32) + server_lr * d).astype(p.dtype),
-        global_params, delta)
+    return apply_delta(global_params, delta, server_lr)
 
 
 AGGREGATORS = {"fedavg": fedavg}

@@ -30,13 +30,34 @@ cohort, so per-client base times are derived from each client's step count
 scaled by the measured per-step cost of the batched program; the
 system-heterogeneity simulator and GreedyAda makespan (Eq. 1) consume those
 exactly as before.
+
+Device-mesh sharding (``resources.distributed = "data"``): the stacked
+client dimension is additionally sharded over a 1-D ``jax.sharding.Mesh``
+of the local devices (axis ``"clients"``) via ``NamedSharding`` on the
+jitted program's inputs/outputs — global params replicated, client
+data / batch indices / evolving local params sharded.  Because the cohort
+is bucket-padded to a power of two (and at least the mesh size), shards
+stay equal-sized and one compiled program serves every round.  Each
+client's local training is independent, so the program runs without any
+cross-device collective; communication happens only at aggregation, where
+``kernels.fedavg_agg.fedavg_aggregate_sharded`` reduces per-shard partial
+weighted sums with a ``psum`` epilogue instead of gathering all N updates
+to one device.
+
+Virtual-clock semantics under sharding are unchanged: the measured wall
+time is the synchronous dispatch of the whole (sharded) cohort program —
+the makespan over shards — and per-client base times remain each client's
+step-count share of that wall time.  Shard placement is an *implementation*
+detail of the simulator host, not part of the simulated federation, so the
+heterogeneity simulator and GreedyAda see exactly the same inputs as the
+unsharded batched path.
 """
 from __future__ import annotations
 
 import time
 import warnings
 from functools import lru_cache
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +69,8 @@ from repro.optim import Optimizer, apply_updates, global_norm
 
 PyTree = Any
 
+CLIENT_AXIS = "clients"
+
 
 def bucket_pow2(n: int, floor: int = 1) -> int:
     """Smallest power of two >= max(n, floor)."""
@@ -57,9 +80,37 @@ def bucket_pow2(n: int, floor: int = 1) -> int:
     return b
 
 
+def build_client_mesh(devices: Optional[Sequence] = None):
+    """1-D mesh over the largest power-of-two prefix of ``devices``.
+
+    The client dimension is bucket-padded to powers of two, so a
+    power-of-two mesh always divides it evenly.  Raises ``ValueError`` when
+    no devices are available (the loud failure mode for
+    ``resources.distributed="data"`` on a mesh-less host).
+    """
+    from jax.sharding import Mesh
+
+    if devices is None:
+        devices = jax.devices()
+    devices = list(devices)
+    if not devices:
+        raise ValueError(
+            'resources.distributed="data" needs at least one jax device to '
+            "build the client mesh, but none are available")
+    n = 1
+    while n * 2 <= len(devices):
+        n *= 2
+    if n < len(devices):
+        warnings.warn(
+            f"client mesh uses {n} of {len(devices)} devices (largest "
+            f"power of two); {len(devices) - n} device(s) stay idle",
+            stacklevel=2)
+    return Mesh(np.asarray(devices[:n]), (CLIENT_AXIS,))
+
+
 @lru_cache(maxsize=32)
 def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
-                        use_prox: bool, use_clip: bool):
+                        use_prox: bool, use_clip: bool, mesh=None):
     """One jitted program running ``steps`` local steps for a whole cohort.
 
     Signature of the returned function (leading dim N_bucket everywhere
@@ -69,6 +120,10 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
             -> (updates, loss_mean, acc_mean)
 
     ``params`` (the stacked copies of the global model) is donated.
+    With ``mesh`` (1-D, axis "clients"), every leading-client-dim argument
+    and output is given a ``NamedSharding`` over the mesh and
+    ``global_params`` is replicated, so the cohort streams through all
+    devices; N_bucket must be a multiple of the mesh size.
     """
 
     def one_client(params, x, y, idx, n_steps, mu, max_norm, global_params):
@@ -123,17 +178,39 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
 
     batched = jax.vmap(one_client,
                        in_axes=(0, 0, 0, 0, 0, 0, 0, None))
-    return jax.jit(batched, donate_argnums=(0,))
+    if mesh is None:
+        return jax.jit(batched, donate_argnums=(0,))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cl = NamedSharding(mesh, P(CLIENT_AXIS))   # shard the leading client dim
+    rep = NamedSharding(mesh, P())             # replicate
+    return jax.jit(batched,
+                   in_shardings=(cl, cl, cl, cl, cl, cl, cl, rep),
+                   out_shardings=(cl, cl, cl),
+                   donate_argnums=(0,))
 
 
 class BatchedExecutor:
     """Runs a cohort of :class:`repro.core.client.Client` objects as one
     compiled program and hands back per-client result dicts shaped exactly
     like ``Client.train`` output, so the per-client compression/encryption/
-    upload stages (and strategy overrides of them, e.g. STC) keep working."""
+    upload stages (and strategy overrides of them, e.g. STC) keep working.
 
-    def __init__(self, model: FLModel):
+    ``distributed="data"`` shards the stacked client dimension over a 1-D
+    device mesh (see module docstring); ``devices`` overrides the device
+    set (tests use prefixes of the host platform's forced devices to prove
+    shard-count invariance)."""
+
+    def __init__(self, model: FLModel, distributed: str = "none",
+                 devices: Optional[Sequence] = None):
+        if distributed not in ("none", "data"):
+            raise ValueError(
+                f"unknown distributed {distributed!r}; expected 'none' or "
+                f"'data'")
         self.model = model
+        self.distributed = distributed
+        self.mesh = (build_client_mesh(devices)
+                     if distributed == "data" else None)
 
     # ------------------------------------------------------------------
     def _batch_indices(self, client, round_id: int) -> np.ndarray:
@@ -145,10 +222,17 @@ class BatchedExecutor:
         return np.concatenate(rows).astype(np.int32)
 
     # ------------------------------------------------------------------
-    def run_cohort(self, clients: Sequence, global_params: PyTree,
-                   round_id: int) -> List[Dict[str, Any]]:
-        if not clients:
-            return []
+    def run_cohort_stacked(self, clients: Sequence, global_params: PyTree,
+                           round_id: int) -> Dict[str, Any]:
+        """Train the cohort and return the *stacked* results.
+
+        Returns a dict with ``updates`` (pytree, leading dim N_bucket —
+        device-sharded over the client mesh when distributed), ``loss`` /
+        ``acc`` (np arrays, (N_bucket,)), ``n_steps`` (np, (N_bucket,)),
+        ``num_samples`` (np, (N,)), and ``wall`` (float seconds).  The
+        distributed aggregation fast path consumes this directly so client
+        updates never gather onto one device.
+        """
         batch_sizes = {c._batch_size() for c in clients}
         if len(batch_sizes) != 1:
             raise ValueError(
@@ -169,6 +253,8 @@ class BatchedExecutor:
 
         N = len(clients)
         Nb = bucket_pow2(N)
+        if self.mesh is not None:
+            Nb = max(Nb, self.mesh.size)   # equal shards: mesh size divides Nb
         idx_list = [self._batch_indices(c, round_id) for c in clients]
         S = bucket_pow2(max(len(ix) for ix in idx_list))
         maxn = bucket_pow2(max(len(c.data) for c in clients))
@@ -193,10 +279,17 @@ class BatchedExecutor:
         program = make_cohort_program(
             self.model, optimizer, S,
             use_prox=bool((mu > 0).any()),
-            use_clip=bool((max_norm > 0).any()))
+            use_clip=bool((max_norm > 0).any()),
+            mesh=self.mesh)
 
         stacked = jax.tree_util.tree_map(
             lambda p: jnp.broadcast_to(p[None], (Nb,) + p.shape), global_params)
+        if self.mesh is not None:
+            # eager broadcast_to commits to the default device; place the
+            # donated buffer on its client-dim sharding explicitly
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            stacked = jax.device_put(
+                stacked, NamedSharding(self.mesh, P(CLIENT_AXIS)))
         t0 = time.perf_counter()
         with warnings.catch_warnings():
             # CPU backends may decline the donation; that is fine.
@@ -208,19 +301,88 @@ class BatchedExecutor:
         jax.block_until_ready(updates)
         wall = time.perf_counter() - t0
 
+        return {
+            "updates": updates,
+            "loss": np.asarray(loss),
+            "acc": np.asarray(acc),
+            "n_steps": n_steps,
+            "num_samples": np.asarray([len(c.data) for c in clients],
+                                      dtype=np.int64),
+            "wall": wall,
+        }
+
+    # ------------------------------------------------------------------
+    def run_cohort(self, clients: Sequence, global_params: PyTree,
+                   round_id: int) -> List[Dict[str, Any]]:
+        if not clients:
+            return []
+        st = self.run_cohort_stacked(clients, global_params, round_id)
+        return self.per_client_results(clients, st)
+
+    # ------------------------------------------------------------------
+    def aggregate_stacked(self, st: Dict[str, Any],
+                          interpret: Optional[bool] = None) -> PyTree:
+        """FedAvg delta from stacked (sharded) updates without gathering.
+
+        Flattens the stacked update pytree to (N_bucket, D) — client dim
+        still sharded over the mesh — and reduces per-shard partial
+        weighted sums with the ``psum``-epilogue kernel.  Returns the
+        weighted-average (f32) delta as a pytree shaped like the global
+        params (the updates mirror their structure).
+        """
+        from repro.core.aggregation import fedavg_weights
+        from repro.kernels import ops as kops
+        from repro.kernels.fedavg_agg import fedavg_aggregate_sharded
+
+        if self.mesh is None:
+            raise ValueError(
+                'aggregate_stacked needs the client mesh; construct the '
+                'executor with distributed="data"')
+        leaves, treedef = jax.tree_util.tree_flatten(st["updates"])
+        nb = leaves[0].shape[0]
+        num_samples = st["num_samples"]
+        w = np.zeros((nb,), np.float32)
+        w[: len(num_samples)] = fedavg_weights(num_samples)
+        flat = jnp.concatenate([l.reshape(nb, -1) for l in leaves], axis=1)
+        delta = fedavg_aggregate_sharded(
+            flat, jnp.asarray(w), self.mesh,
+            interpret=kops.get_interpret(interpret))
+        # unravel by leaf shape (slices are views; no copy of the model)
+        out, off = [], 0
+        for leaf in leaves:
+            size = int(np.prod(leaf.shape[1:], dtype=np.int64))
+            out.append(delta[off: off + size].reshape(leaf.shape[1:]))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def per_client_results(clients: Sequence, st: Dict[str, Any],
+                           include_update: bool = True
+                           ) -> List[Dict[str, Any]]:
+        """Slice stacked results into ``Client.train``-shaped dicts.
+
+        ``include_update=True`` gathers each client's update to the default
+        device (the non-distributed/compression-compatible path);
+        ``include_update=False`` keeps the stacked updates on the mesh —
+        the distributed fast path aggregates them separately and only
+        needs the metrics/virtual-clock fields here."""
+        updates, loss, acc = st["updates"], st["loss"], st["acc"]
+        n_steps, wall = st["n_steps"], st["wall"]
         # Shared wall time -> per-client base times by step share (the
         # virtual clock's per-step-cost model; see module docstring).
         total_steps = max(int(n_steps.sum()), 1)
-        loss = np.asarray(loss)
-        acc = np.asarray(acc)
         results = []
         for i, c in enumerate(clients):
-            results.append({
-                "update": jax.tree_util.tree_map(lambda a, i=i: a[i], updates),
+            res = {
                 "num_samples": len(c.data),
                 "metrics": {"loss": float(loss[i]),
                             "accuracy": float(acc[i]),
                             "batches": float(n_steps[i])},
                 "train_time": wall * float(n_steps[i]) / total_steps,
-            })
+            }
+            if include_update:
+                res["update"] = jax.tree_util.tree_map(
+                    lambda a, i=i: a[i], updates)
+            results.append(res)
         return results

@@ -173,13 +173,25 @@ class ResourceConfig:
     ``aggregation_kernel`` switches the FedAvg weighted average onto the
     chunked streaming Pallas kernel (``repro.kernels.fedavg_agg``); the
     default jnp einsum path is its oracle.
+
+    ``distributed`` shards the batched engine across a jax device mesh:
+
+    * ``"none"`` — the whole cohort program runs on the default device.
+    * ``"data"`` — the stacked client dimension is sharded over a 1-D
+      ``Mesh`` of the local devices (``NamedSharding``; params replicated,
+      client data / local states sharded), so cohorts larger than one
+      accelerator's memory stream through.  Requires
+      ``execution="batched"``; when eligible, FedAvg aggregation consumes
+      per-shard partial weighted sums with a ``psum`` epilogue instead of
+      gathering all N updates to one device
+      (``repro.kernels.fedavg_agg.fedavg_aggregate_sharded``).
     """
 
     num_devices: int = 1              # M simulated accelerators
     allocation: str = "greedy_ada"    # greedy_ada | random | slowest | one_per_device
     default_client_time: float = 1.0  # t: default training time before profiling
     momentum: float = 0.5             # m: moving-average momentum for t update
-    distributed: bool = False         # use jax device mesh when available
+    distributed: str = "none"         # none | data (shard cohort over mesh)
     execution: str = "sequential"     # sequential | batched
     aggregation_kernel: bool = False  # FedAvg via the Pallas streaming kernel
 

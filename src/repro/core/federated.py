@@ -122,11 +122,12 @@ def make_fed_round_step(model: Model, optimizer: Optimizer,
         traffic is 1 byte/param instead of 4 (partial-auto shard_map both
         crashes the CPU AllReducePromotion pass and forces cross-pod
         rematerialization — measured in EXPERIMENTS.md §Perf pair C)."""
-        import jax.sharding as jsh
         from jax.sharding import PartitionSpec as P
 
-        mesh = jsh.get_abstract_mesh()
-        use_sm = (mesh is not None and not getattr(mesh, "empty", True)
+        from repro.models.sharding import current_mesh, shard_map
+
+        mesh = current_mesh()
+        use_sm = (mesh is not None
                   and "pod" in mesh.axis_names and params_pspec is not None)
 
         def body(d_loc, r_loc):
@@ -148,10 +149,8 @@ def make_fed_round_step(model: Model, optimizer: Optimizer,
         def sync_one(d, r, leaf_spec):
             if use_sm:
                 spec = P("pod", *tuple(leaf_spec))
-                return jax.shard_map(
-                    body, mesh=mesh, in_specs=(spec, spec),
-                    out_specs=(spec, spec),
-                    axis_names=set(mesh.axis_names), check_vma=False)(d, r)
+                return shard_map(
+                    body, mesh, (spec, spec), (spec, spec))(d, r)
             # CPU/1-device fallback: same math without the mesh
             corrected = d + r
             scale = jnp.maximum(

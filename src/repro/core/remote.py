@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.comm.transport import RPCServer, SocketTransport, parallel_requests
 from repro.core import compression as comp
+from repro.core.aggregation import weighted_train_loss
 from repro.core.client import Client
 from repro.core.config import Config
 from repro.core.server import Server
@@ -109,8 +110,7 @@ class RemoteServer:
             "clients": len(selected),
             "comm_down_bytes": _wire_bytes(wire) * len(selected),
             "comm_up_bytes": sum(_wire_bytes(r) for r in results),
-            "train_loss": float(np.mean([r["metrics"]["loss"]
-                                         for r in results])),
+            "train_loss": weighted_train_loss(results),
         }
         metrics.update(self.server.test())
         self.tracker.track_round(self.cfg.task_id, round_id, **metrics)
@@ -120,6 +120,7 @@ class RemoteServer:
     def run(self, rounds: Optional[int] = None) -> List[Dict[str, float]]:
         for r in range(rounds or self.cfg.server.rounds):
             self.run_round(r)
+        self.server.finalize()    # buffered aggregators (FedBuff) flush here
         return self.history
 
     def stop(self) -> None:

@@ -21,6 +21,9 @@ from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
 
+import jax
+
+from repro.core.aggregation import weighted_train_loss
 from repro.core.batched import BatchedExecutor
 from repro.core.client import Client
 from repro.core.config import Config
@@ -51,7 +54,17 @@ class Trainer:
             raise ValueError(
                 f"unknown execution {config.resources.execution!r}; "
                 f"expected 'sequential' or 'batched'")
-        self.engine = (BatchedExecutor(model)
+        if config.resources.distributed not in ("none", "data"):
+            raise ValueError(
+                f"unknown distributed {config.resources.distributed!r}; "
+                f"expected 'none' or 'data'")
+        if config.resources.distributed == "data" and \
+                config.resources.execution != "batched":
+            raise ValueError(
+                'resources.distributed="data" shards the batched engine; '
+                'set resources.execution="batched"')
+        self.engine = (BatchedExecutor(model,
+                                       distributed=config.resources.distributed)
                        if config.resources.execution == "batched" else None)
         self.het = SystemHeterogeneity(config.system_heterogeneity)
         self.scheduler = GreedyAda(
@@ -84,7 +97,7 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _run_batched(self, selected: List[str], payload: Dict[str, Any],
-                     round_id: int) -> List[Dict[str, Any]]:
+                     round_id: int):
         """Train the whole cohort in one compiled program, then run each
         client's post-train stages (compression/encryption/upload) so
         strategy overrides like STC keep working.
@@ -93,7 +106,17 @@ class Trainer:
         the same payload), through the first client's download/decompression
         so uniform stage overrides are honored; heterogeneous pre-train or
         ``train`` overrides cannot be vectorized and raise instead of
-        silently diverging."""
+        silently diverging.
+
+        Returns ``(results, aggregated)``.  Under
+        ``resources.distributed="data"`` with default post-train stages and
+        plain FedAvg, aggregation happens *on the mesh* (per-shard partial
+        weighted sums + psum — ``BatchedExecutor.aggregate_stacked``) and
+        ``aggregated=True``: the per-client results then carry metrics and
+        byte accounting but no ``"update"``, because client updates never
+        gather to the host.  Any compression / custom stage / non-FedAvg
+        aggregator falls back to the gathering path (still mesh-sharded
+        compute, per-client update extraction)."""
         clients = [self.client(c) for c in selected]
         for stage in ("download", "decompression", "train"):
             impls = {getattr(type(c), stage) for c in clients}
@@ -104,6 +127,31 @@ class Trainer:
                     f"{stage!r} overrides ({[type(c).__name__ for c in clients]}); "
                     f"use resources.execution='sequential'")
         global_params = clients[0].decompression(clients[0].download(payload))
+
+        sharded_agg = (
+            self.engine.mesh is not None
+            and self.cfg.client.compression == "none"
+            and self.cfg.server.aggregation == "fedavg"
+            and type(self.server).aggregation is Server.aggregation
+            and all(type(c).compression is Client.compression
+                    and type(c).encryption is Client.encryption
+                    and type(c).upload is Client.upload for c in clients))
+        if sharded_agg:
+            st = self.engine.run_cohort_stacked(clients, global_params,
+                                                round_id)
+            delta = self.engine.aggregate_stacked(st)
+            self.server.apply_delta(delta)
+            # dense f32 update wire size, identical across the cohort
+            upd_bytes = sum(
+                int(np.prod(l.shape)) * 4
+                for l in jax.tree_util.tree_leaves(global_params))
+            results = self.engine.per_client_results(clients, st,
+                                                     include_update=False)
+            for client, res in zip(clients, results):
+                res["client_id"] = client.client_id
+                res["payload_bytes"] = upd_bytes
+            return results, True
+
         raw = self.engine.run_cohort(clients, global_params, round_id)
         results = []
         for client, res in zip(clients, raw):
@@ -111,7 +159,7 @@ class Trainer:
             res = client.encryption(res)
             res["client_id"] = client.client_id
             results.append(client.upload(res))
-        return results
+        return results, False
 
     # ------------------------------------------------------------------
     def run_round(self, round_id: int) -> Dict[str, float]:
@@ -121,17 +169,19 @@ class Trainer:
         groups = self._allocate(selected, round_id)
 
         results, sim_times, wall_times = [], {}, {}
+        aggregated = False
         t_wall0 = time.perf_counter()
         down_bytes = payload.get("payload_bytes", 0) * len(selected)
         up_bytes = 0
         if self.engine is not None:
-            results = self._run_batched(selected, payload, round_id)
+            results, aggregated = self._run_batched(selected, payload,
+                                                    round_id)
             for res in results:
                 cid = res["client_id"]
                 wall_times[cid] = res["train_time"]
                 sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
-                up_bytes += res.get(
-                    "payload_bytes", comp.payload_bytes(res["update"]))
+                up_bytes += (res["payload_bytes"] if "payload_bytes" in res
+                             else comp.payload_bytes(res["update"]))
         else:
             for group in groups:
                 for cid in group:
@@ -139,23 +189,25 @@ class Trainer:
                     results.append(res)
                     wall_times[cid] = res["train_time"]
                     sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
-                    up_bytes += res.get(
-                        "payload_bytes", comp.payload_bytes(res["update"]))
+                    up_bytes += (res["payload_bytes"] if "payload_bytes" in res
+                                 else comp.payload_bytes(res["update"]))
 
         # Eq. 1 makespan under the virtual clock
         round_virtual = max(
             (sum(sim_times[c] for c in g) for g in groups if g), default=0.0)
         self.scheduler.update(sim_times)
-        server.aggregation(results)
+        if not aggregated:
+            server.aggregation(results)
         wall = time.perf_counter() - t_wall0
 
+        train_loss = weighted_train_loss(results)
         metrics = {
             "round_time": round_virtual,
             "wall_time": wall,
             "clients": len(selected),
             "comm_down_bytes": down_bytes,
             "comm_up_bytes": up_bytes,
-            "train_loss": float(np.mean([r["metrics"]["loss"] for r in results])),
+            "train_loss": train_loss,
         }
         if self.cfg.server.test_every and \
            (round_id + 1) % self.cfg.server.test_every == 0:
@@ -175,7 +227,6 @@ class Trainer:
     # ------------------------------------------------------------------
     def run(self, callback: Optional[Callable] = None) -> Dict[str, Any]:
         if self.server.params is None:
-            import jax
             self.server.params = self.model.init(
                 jax.random.PRNGKey(self.cfg.seed))
         if self.cfg.tracking.enabled:
@@ -183,6 +234,7 @@ class Trainer:
             self.tracker.create_task(self.cfg.task_id, to_dict(self.cfg))
         for r in range(self.cfg.server.rounds):
             self.run_round(r)
+        self.server.finalize()
         summary = {
             "task_id": self.cfg.task_id,
             "rounds": self.cfg.server.rounds,

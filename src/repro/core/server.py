@@ -55,6 +55,16 @@ class Server:
         self.params = agg(self.params, updates, counts,
                           use_kernel=self.cfg.resources.aggregation_kernel)
 
+    def apply_delta(self, delta: Any, server_lr: float = 1.0) -> None:
+        """Apply a pre-aggregated update delta (the distributed batched
+        path aggregates on-mesh and bypasses :meth:`aggregation`)."""
+        from repro.core.aggregation import apply_delta
+        self.params = apply_delta(self.params, delta, server_lr)
+
+    def finalize(self) -> None:
+        """End-of-training hook; buffered-aggregation servers (FedBuff)
+        flush leftover updates here."""
+
     # ------------------------------------------------------------------
     def test(self) -> Dict[str, float]:
         if self.test_data is None:

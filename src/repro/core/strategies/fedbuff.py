@@ -4,10 +4,14 @@ AISTATS'22] — an *aggregation-stage* plugin with staleness weighting.
 In the asynchronous regime the server applies an aggregate as soon as K
 client updates have arrived, weighting each by 1/sqrt(1+staleness) (rounds
 elapsed since the update's base model).  The simulation runtime delivers
-results round-synchronously, so staleness is derived from the virtual
-clock: a client whose simulated time exceeds the round's median is treated
-as one round stale — the same straggler-discounting behaviour, expressed
-through the platform's existing heterogeneity machinery."""
+results round-synchronously, so staleness starts from the virtual clock —
+a client whose simulated time exceeds the round's median arrives one round
+stale — and then *ages*: updates left in the buffer because fewer than K
+have accumulated carry over to later rounds, their staleness incremented
+once per round held, so a K=5 buffer fed 3 updates/round genuinely defers
+aggregation instead of flushing every round.  ``finalize()`` (called by
+the runtime after the last round) flushes whatever remains so no update is
+ever dropped."""
 from __future__ import annotations
 
 from typing import Any, Dict, List
@@ -15,11 +19,10 @@ from typing import Any, Dict, List
 import numpy as np
 
 from repro.core import compression as comp
-from repro.core.aggregation import fedavg_weights, weighted_average
+from repro.core.aggregation import (
+    apply_delta, fedavg_weights, weighted_average,
+)
 from repro.core.server import Server
-
-import jax
-import jax.numpy as jnp
 
 
 class FedBuffServer(Server):
@@ -30,6 +33,11 @@ class FedBuffServer(Server):
         self._buffer: List[Dict[str, Any]] = []
 
     def aggregation(self, results: List[Dict[str, Any]]) -> None:
+        # age carried-over updates first: one more round has now elapsed
+        # since their base model (aging on arrival-round exit would
+        # over-count staleness for leftovers flushed by finalize())
+        for r in self._buffer:
+            r["_staleness"] += 1
         # staleness from the virtual clock: slower-than-median == 1 stale
         times = np.array([r.get("train_time", 0.0) for r in results])
         med = float(np.median(times)) if len(times) else 0.0
@@ -40,7 +48,10 @@ class FedBuffServer(Server):
             batch, self._buffer = (self._buffer[: self.buffer_size],
                                    self._buffer[self.buffer_size:])
             self._apply(batch)
-        # a round must always make progress: flush leftovers
+        # sub-K leftovers stay buffered into the next round
+
+    def finalize(self) -> None:
+        """End-of-training flush: apply whatever is still buffered."""
         if self._buffer:
             self._apply(self._buffer)
             self._buffer = []
@@ -51,6 +62,4 @@ class FedBuffServer(Server):
         w = w / np.sqrt(1.0 + np.array([r["_staleness"] for r in batch]))
         w = (w / w.sum()).astype(np.float32)
         delta = weighted_average(updates, w)
-        self.params = jax.tree_util.tree_map(
-            lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype),
-            self.params, delta)
+        self.params = apply_delta(self.params, delta)

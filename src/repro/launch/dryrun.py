@@ -132,7 +132,8 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
                 "decode": "serve"}[shape.kind]
 
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    from repro.models.sharding import use_mesh
+    with use_mesh(mesh):
         if step == "train":
             state_abs, state_shard, _ = build_state_specs(
                 model, optimizer, mesh, rules)
@@ -234,6 +235,9 @@ def dryrun(arch: str, shape_name: str, multi_pod: bool = False,
         compile_s = time.time() - t1
 
     cost = compiled.cost_analysis() or {}
+    # older jaxlibs return a one-element list of dicts
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_info = {

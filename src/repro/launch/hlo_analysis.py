@@ -67,10 +67,12 @@ _HEAVY_OPS = {"dot", "convolution", "sort", "scatter", "gather",
 # within ~2x.
 
 # non-greedy args: operand lists contain no parens in post-opt HLO; the
-# attribute tail (condition=, calls=, backend_config=...) follows the ")"
-_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+"
+# attribute tail (condition=, calls=, backend_config=...) follows the ")".
+# The "%" sigil on instruction/computation names is optional: older XLA
+# prints "%dot.3 = ...", newer prints "dot.3 = ...".
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
                        r"([\w\-]+)\((.*?)\)(.*)$")
-_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s+\(.*\)\s*->\s*.+\s*\{")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\s*\{")
 
 
 def _type_bytes(type_str: str) -> int:
@@ -208,18 +210,42 @@ def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
     return mult
 
 
+def _split_top(args: str) -> List[str]:
+    """Split an operand list on top-level commas only (shape dims
+    ``f32[256,512]``, layouts ``{1,0}``, and literal tuples nest commas)."""
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in args:
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
 def _dot_flops(comp: Computation, ins: Instr) -> float:
     out_dims = _dims(ins.type_str) or []
     out_prod = 1
     for d in out_dims:
         out_prod *= d
-    # contracting dims from the lhs operand's type
-    lhs_name = ins.args.split(",")[0].strip().lstrip("%")
-    # operand list may carry inline types: "f32[..] %a, f32[..] %b"
-    m = re.match(r".*%([\w\.\-]+)$", ins.args.split(",")[0].strip())
-    if m:
-        lhs_name = m.group(1)
+    # contracting dims from the lhs operand's type.  The operand may be
+    # "f32[256,512]{1,0} %a", "f32[256,512] a", "%a", or "a" depending on
+    # the XLA printer version — take the last token of the first top-level
+    # operand, and fall back to its inline type when the symtab misses.
+    parts = _split_top(ins.args)
+    lhs = parts[0] if parts else ""
+    lhs_name = lhs.split()[-1].lstrip("%") if lhs.split() else ""
     lhs_type = comp.symtab.get(lhs_name)
+    if lhs_type is None and _SHAPE_RE.search(lhs):
+        lhs_type = lhs
     lhs_dims = _dims(lhs_type) if lhs_type else None
     cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
                       ins.args + " " + ins.tail)
@@ -285,7 +311,18 @@ class _UnionFind:
 
 
 def _operands(ins: Instr) -> List[str]:
-    return [m.group(1) for m in re.finditer(r"%([\w\.\-]+)", ins.args)]
+    """Operand names for both printer styles: sigil ("%a") and bare ("a"),
+    with or without inline operand types.  Non-operand parenthesized args
+    (parameter indices, constant literals) yield tokens that never resolve
+    in the symtab and are filtered by every caller."""
+    if "%" in ins.args:
+        return [m.group(1) for m in re.finditer(r"%([\w\.\-]+)", ins.args)]
+    names = []
+    for part in _split_top(ins.args):
+        toks = part.split()
+        if toks:
+            names.append(toks[-1])
+    return names
 
 
 def _comp_hbm_bytes(comp: Computation, fusion_root: Dict[str, str],

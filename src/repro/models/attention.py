@@ -126,11 +126,10 @@ def _plain_attention(q, k, v, mask):
     if os.environ.get("REPRO_ATTN_HINTS", "1") == "0":
         head_sharded = True
     else:
-        import jax.sharding as _jsh
-        mesh = _jsh.get_abstract_mesh()
+        from repro.models.sharding import current_mesh
+        mesh = current_mesh()
         n_model = (dict(mesh.shape).get("model", 1)
-                   if mesh is not None and not getattr(mesh, "empty", True)
-                   else 1)
+                   if mesh is not None else 1)
         K, G = q.shape[2], q.shape[3]
         head_sharded = (n_model <= 1 or K % n_model == 0
                         or G % n_model == 0 or (K * G) % n_model == 0)

@@ -114,12 +114,12 @@ def moe_ffn_expert_parallel(cfg: ArchConfig, p, x,
     combined outputs are re-gathered.  Collective bytes per layer drop from
     O(all tokens all-gathered per expert-shard) to
     O(tokens·top_k/E·capacity) moved point-to-point."""
-    import jax.sharding as jsh
     from jax.sharding import PartitionSpec as P
 
-    mesh = jsh.get_abstract_mesh()
-    if mesh is None or getattr(mesh, "empty", True) or \
-            "model" not in mesh.axis_names:
+    from repro.models.sharding import current_mesh, shard_map
+
+    mesh = current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return moe_ffn(cfg, p, x, capacity_factor)
     sizes = dict(mesh.shape)
     n_model = sizes.get("model", 1)
@@ -196,10 +196,10 @@ def moe_ffn_expert_parallel(cfg: ArchConfig, p, x,
     else:
         expert_args = [p["w_up"], p["w_down"]]
     in_specs += [P("model", None, None)] * len(expert_args)
-    out, aux = jax.shard_map(
-        body, mesh=mesh, in_specs=tuple(in_specs),
-        out_specs=(P(data_part, None, None), P()),
-        axis_names=set(manual), check_vma=False,
+    out, aux = shard_map(
+        body, mesh, tuple(in_specs),
+        (P(data_part, None, None), P()),
+        manual_axes=manual,
     )(x, p["router"], *expert_args)
 
     if m.n_shared:

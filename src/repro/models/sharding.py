@@ -51,14 +51,83 @@ def use_rules(rules: Dict[str, Optional[Tuple[str, ...]]]):
         _state.rules = old
 
 
-def _ambient_mesh():
+def current_mesh():
+    """Version-tolerant ambient-mesh lookup; None when no mesh is active.
+
+    ``jax.sharding.get_abstract_mesh`` only exists in newer JAX releases;
+    older releases (and ``with mesh:`` blocks on every release) record the
+    mesh in the pxla thread-local resource env.  Try the new API first,
+    then the thread-local, and treat an empty mesh as "no mesh".
+    """
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_am is not None:
+        try:
+            m = get_am()
+            if m is not None and not getattr(m, "empty", True):
+                return m
+        except Exception:
+            pass
     try:
-        m = jax.sharding.get_abstract_mesh()
-        if m is None or getattr(m, "empty", True):
-            return None
-        return m
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        if m is not None and not getattr(m, "empty", True):
+            return m
     except Exception:
-        return None
+        pass
+    return None
+
+
+@contextmanager
+def use_mesh(mesh):
+    """Enter ``mesh`` as the ambient mesh on any supported JAX version
+    (``jax.set_mesh`` / ``jax.sharding.use_mesh`` / ``with mesh:``)."""
+    setter = getattr(jax, "set_mesh", None) or \
+        getattr(jax.sharding, "use_mesh", None)
+    if setter is not None:
+        with setter(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` across the axis_types API change: newer JAX wants
+    explicit Auto axis types for sharding propagation; older JAX has no
+    such kwarg (everything is Auto)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                axis_shapes, axis_names, devices=devices,
+                axis_types=(axis_type.Auto,) * len(tuple(axis_names)))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names, devices=devices)
+
+
+def shard_map(f, mesh, in_specs, out_specs, manual_axes=None):
+    """Full/partial-manual shard_map across the API rename.
+
+    Newer JAX: ``jax.shard_map(..., axis_names=..., check_vma=False)``.
+    Older JAX: ``jax.experimental.shard_map.shard_map(..., check_rep=False,
+    auto=<non-manual axes>)``.  ``manual_axes`` defaults to every mesh axis
+    (full-manual).
+    """
+    manual = frozenset(manual_axes if manual_axes is not None
+                       else mesh.axis_names)
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=set(manual), check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    auto = frozenset(mesh.axis_names) - manual
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False, auto=auto)
+
+
+def _ambient_mesh():
+    return current_mesh()
 
 
 def resolve_spec(logical: Tuple[Optional[str], ...], shape=None) -> Optional[P]:

@@ -21,6 +21,11 @@ except ImportError:
                       "test_partition.py", "test_serialize.py"]
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: subprocess-heavy tests (compile or multi-device)")
+
+
 @pytest.fixture()
 def rng():
     return np.random.RandomState(0)

@@ -58,8 +58,8 @@ _SUBPROC = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.launch.hlo_analysis import analyze_hlo
 
-    mesh = jax.make_mesh((8,), ("d",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.models.sharding import make_mesh
+    mesh = make_mesh((8,), ("d",))
     sh = NamedSharding(mesh, P("d", None))
     rep = NamedSharding(mesh, P())
     s = jax.ShapeDtypeStruct((1024, 256), jnp.float32)

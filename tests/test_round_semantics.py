@@ -1,0 +1,151 @@
+"""Round-level FedAvg semantics: sample-weighted reported loss and
+FedBuff's cross-round buffer (staleness that actually ages)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro as easyfl
+from repro.core.client import Client
+from repro.core.config import Config
+from repro.core.rounds import Trainer
+from repro.core.server import Server
+from repro.core.strategies.fedbuff import FedBuffServer
+from repro.data.fed_data import build_federated_data
+from repro.models.registry import get_model
+
+
+def _zero_update(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def test_train_loss_weighted_by_num_samples(monkeypatch):
+    """A 1-sample client with huge loss must barely move the reported
+    cohort loss (FedAvg weighting), not dominate an unweighted mean."""
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": 2, "batch_size": 32},
+        "server": {"rounds": 1, "clients_per_round": 2, "test_every": 0},
+        "tracking": {"enabled": False},
+    })
+    model = get_model(cfg.model)
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(0))
+    params = trainer.server.params
+
+    canned = {"client_0000": (1, 10.0), "client_0001": (1000, 1.0)}
+
+    def fake_run_round(self, payload, round_id):
+        n, loss = canned.get(self.client_id, (1, 0.0))
+        return {"client_id": self.client_id, "update": _zero_update(params),
+                "num_samples": n, "metrics": {"loss": loss, "accuracy": 0.0},
+                "train_time": 0.01}
+
+    monkeypatch.setattr(Client, "run_round", fake_run_round)
+    ids = sorted(fed.client_ids)[:2]
+    monkeypatch.setattr(trainer.server, "selection",
+                        lambda client_ids, round_id: list(ids))
+    metrics = trainer.run_round(0)
+    expected = (1 * 10.0 + 1000 * 1.0) / 1001
+    assert metrics["train_loss"] == pytest.approx(expected, rel=1e-6)
+    assert abs(metrics["train_loss"] - 5.5) > 1       # not the unweighted mean
+
+
+# ---------------------------------------------------------------------------
+# FedBuff cross-round buffering
+# ---------------------------------------------------------------------------
+
+
+def _mk_fedbuff():
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": 4, "batch_size": 32},
+        "tracking": {"enabled": False},
+    })
+    model = get_model(cfg.model)
+    fed = build_federated_data(cfg.data)
+    srv = FedBuffServer(model, cfg, fed.test)
+    srv.params = model.init(jax.random.PRNGKey(0))
+    return srv
+
+
+def _results(k, params, t0=0.0):
+    return [{"update": _zero_update(params), "num_samples": 10,
+             "train_time": t0 + i * 0.1} for i in range(k)]
+
+
+def test_fedbuff_buffer_spans_rounds_and_staleness_ages(monkeypatch):
+    """K=5 fed 3 updates/round: round 1 defers entirely, round 2 applies
+    one batch of 5 and carries 1 leftover whose staleness keeps growing."""
+    srv = _mk_fedbuff()
+    applied = []
+    monkeypatch.setattr(
+        srv, "_apply",
+        lambda batch: applied.append([r["_staleness"] for r in batch]))
+
+    srv.aggregation(_results(3, srv.params))          # buffer: 3 < K
+    assert applied == []
+    assert len(srv._buffer) == 3
+    # fresh this round: 0, or 1 for the slower-than-median stragglers
+    # (aging happens when the *next* round arrives, so a finalize() flush
+    # in the arrival round is not over-discounted)
+    assert {r["_staleness"] for r in srv._buffer} == {0, 1}
+
+    srv.aggregation(_results(3, srv.params))          # 6 >= K: one batch of 5
+    assert len(applied) == 1 and len(applied[0]) == 5
+    assert len(srv._buffer) == 1                       # leftover carried
+    leftover = srv._buffer[0]
+    s0 = leftover["_staleness"]
+
+    srv.aggregation(_results(3, srv.params))          # 4 < K: defers again
+    assert len(applied) == 1
+    assert leftover["_staleness"] == s0 + 1            # ages per round held
+
+    srv.finalize()                                     # end-of-training flush
+    assert len(applied) == 2 and len(applied[1]) == 4
+    assert srv._buffer == []
+
+
+def test_fedbuff_deferred_round_leaves_params_unchanged():
+    srv = _mk_fedbuff()
+    before = jax.tree_util.tree_map(np.asarray, srv.params)
+    srv.aggregation(_results(3, srv.params))           # 3 < K=5: no apply
+    for a, b in zip(jax.tree_util.tree_leaves(before),
+                    jax.tree_util.tree_leaves(srv.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    srv.finalize()                                     # flush applies now
+    assert srv._buffer == []
+
+
+def test_remote_server_run_flushes_buffered_aggregators(monkeypatch):
+    """RemoteServer.run must finalize() the server so FedBuff leftovers
+    are not dropped in the service deployment path."""
+    from repro.core.remote import RemoteServer
+
+    srv = _mk_fedbuff()
+    rs = RemoteServer(srv, srv.cfg)
+    monkeypatch.setattr(rs, "run_round",
+                        lambda r: srv.aggregation(_results(3, srv.params)))
+    flushed = []
+    monkeypatch.setattr(srv, "_apply", lambda batch: flushed.append(len(batch)))
+    rs.run(rounds=1)
+    assert flushed == [3]          # 3 < K=5 deferred, finalize flushed them
+
+
+def test_fedbuff_end_to_end_still_trains():
+    """Sub-K cohorts (3/round vs K=5) through the full runtime: updates
+    defer across rounds, finalize flushes, training still converges."""
+    easyfl.reset()
+    easyfl.init({
+        "model": "linear", "dataset": "synthetic",
+        "data": {"num_clients": 9, "batch_size": 32},
+        "server": {"rounds": 6, "clients_per_round": 3},
+        "client": {"local_epochs": 2, "lr": 0.1},
+    })
+    easyfl.register_server(FedBuffServer)
+    res = easyfl.run()
+    accs = [h["accuracy"] for h in res["history"]]
+    assert accs[-1] > accs[0]
+    easyfl.reset()

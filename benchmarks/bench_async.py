@@ -1,0 +1,130 @@
+"""Async (FedBuff event loop) vs synchronous batched rounds.
+
+For the same client-update budget, measures the **simulated wall-clock**
+(virtual time) needed by:
+
+* synchronous batched rounds with one client per device — every round is
+  a barrier gated by its slowest client;
+* ``resources.execution = "async"`` with buffer size K = N/2 and
+  ``max_concurrency = N`` — completions stream, fast clients cycle more
+  often, the server aggregates every K completions with
+  staleness-discounted weights.
+
+Swept over device-class speed spreads {1x (uniform), 2x, 4x}; the async
+path must win whenever the spread is >= 2x (at 1x there is nothing to
+overlap, so parity is expected and reported).  Also reports the
+degenerate-case check (K = N, uniform speed): the async model must match
+the synchronous batched model bit-near (max |param diff|).
+
+``collect()`` returns the numbers for regression checks / --json mode.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Sequence
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+SPREADS = (1.0, 2.0, 4.0)
+N = 8                      # cohort / pool size (pool fully in flight)
+SYNC_ROUNDS = 4            # -> 32 updates; async runs 8 aggs of K=4
+REPEATS = 2                # virtual times summed over repeats (damps noise)
+
+
+def _make_trainer(model, execution: str, rounds: int, spread: float,
+                  buffer_size: int = 0, max_concurrency: int = 0,
+                  seed: int = 0):
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.core.server import Server
+    from repro.data.fed_data import build_federated_data
+
+    cfg = Config.make({
+        "model": "linear", "seed": seed,
+        "data": {"dataset": "synthetic", "num_clients": N, "batch_size": 32},
+        "server": {"rounds": rounds, "clients_per_round": N, "test_every": 0},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "system_heterogeneity": {"enabled": spread != 1.0},
+        "resources": {"execution": execution,
+                      "allocation": "one_per_device",
+                      "buffer_size": buffer_size,
+                      "max_concurrency": max_concurrency},
+        "tracking": {"enabled": False},
+    })
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(cfg.seed))
+    # deterministic device classes: half the pool fast, half `spread`x slower
+    for i, cid in enumerate(sorted(fed.client_ids)):
+        trainer.het.assignment[cid] = 1.0 if i % 2 == 0 else spread
+    return trainer
+
+
+def collect(spreads: Iterable[float] = SPREADS) -> Dict[str, Dict]:
+    from repro.models.registry import get_model
+
+    model = get_model("linear")
+    # warm-up: compile the cohort programs outside any measured virtual clock
+    _make_trainer(model, "batched", 1, 2.0).run()
+    _make_trainer(model, "async", 2, 2.0, buffer_size=N // 2,
+                  max_concurrency=N).run()
+
+    out: Dict[str, Dict] = {"virtual_time": {}, "degenerate": {}}
+    for spread in spreads:
+        v_sync = v_async = updates = 0.0
+        staleness = []
+        for rep in range(REPEATS):
+            rs = _make_trainer(model, "batched", SYNC_ROUNDS, spread,
+                               seed=rep).run()
+            ra = _make_trainer(model, "async", 2 * SYNC_ROUNDS, spread,
+                               buffer_size=N // 2, max_concurrency=N,
+                               seed=rep).run()
+            v_sync += sum(h["round_time"] for h in rs["history"])
+            v_async += sum(h["round_time"] for h in ra["history"])
+            updates += sum(h["clients"] for h in ra["history"])
+            staleness += [h["staleness_mean"] for h in ra["history"]]
+        out["virtual_time"][str(spread)] = {
+            "sync_s": v_sync,
+            "async_s": v_async,
+            "speedup": v_sync / v_async if v_async else float("inf"),
+            "updates": updates,
+            "staleness_mean": float(np.mean(staleness)),
+        }
+
+    # degenerate: K = N, uniform speed -> same trajectory as batched sync
+    rb = _make_trainer(model, "batched", SYNC_ROUNDS, 1.0, seed=7).run()
+    rd = _make_trainer(model, "async", SYNC_ROUNDS, 1.0, buffer_size=N,
+                       max_concurrency=N, seed=7).run()
+    diff = max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+        for a, b in zip(jax.tree_util.tree_leaves(rb["params"]),
+                        jax.tree_util.tree_leaves(rd["params"])))
+    out["degenerate"]["param_max_abs_diff"] = diff
+    return out
+
+
+def main() -> None:
+    data = collect()
+    rows = []
+    for spread, d in sorted(data["virtual_time"].items(),
+                            key=lambda kv: float(kv[0])):
+        rows.append((f"virtual_sync_s_spread{spread}", d["sync_s"], ""))
+        rows.append((f"virtual_async_s_spread{spread}", d["async_s"],
+                     f"{d['speedup']:.2f}x vs sync barrier"))
+        rows.append((f"async_staleness_mean_spread{spread}",
+                     d["staleness_mean"], ""))
+    rows.append(("async_degenerate_param_max_abs_diff",
+                 data["degenerate"]["param_max_abs_diff"],
+                 "K=N uniform-speed == batched sync"))
+    emit(rows)
+    for spread, d in data["virtual_time"].items():
+        if float(spread) >= 2.0 and d["async_s"] >= d["sync_s"]:
+            raise SystemExit(
+                f"async not faster than sync at {spread}x heterogeneity: "
+                f"{d['async_s']:.4f}s vs {d['sync_s']:.4f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,8 @@ BENCHES = [
      "Sequential vs batched execution + streaming aggregation"),
     ("distributed", "benchmarks.bench_distributed",
      "Mesh-sharded cohort (resources.distributed) per-shard round times"),
+    ("async", "benchmarks.bench_async",
+     "Async FedBuff event loop vs synchronous rounds (simulated wall-clock)"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline table from dry-run"),
 ]
 

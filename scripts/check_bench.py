@@ -17,7 +17,9 @@ Test-baseline mode ("no worse than seed", mechanically):
 Runs the tier-1 suite and fails if the failure count exceeds the count
 recorded in ``scripts/test_baseline.json`` (seed had 29 failures; the
 mesh-API + HLO-analyzer fixes brought it to 0).  ``--update`` rewrites the
-baseline after an intentional change.
+baseline after an intentional change.  Also runs the doc-sync gate
+(``scripts/check_docs.py``): every config field documented in
+``docs/config.md`` and the README quickstart still runs.
 """
 from __future__ import annotations
 
@@ -34,9 +36,22 @@ BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "test_baseline.json")
 
 
-def check_tests(update: bool = False) -> int:
-    """Run the tier-1 suite; gate the failure count against the baseline."""
+def check_docs() -> int:
+    """Doc-sync gate: delegates to scripts/check_docs.py (exit code)."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "check_docs.py")],
+        cwd=root, text=True)
+    return r.returncode
+
+
+def check_tests(update: bool = False) -> int:
+    """Run the tier-1 suite; gate the failure count against the baseline.
+
+    Also runs the doc-sync gate — a green suite with rotten docs still
+    fails."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    docs_rc = check_docs()
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -57,6 +72,9 @@ def check_tests(update: bool = False) -> int:
         with open(BASELINE_PATH, "w") as f:
             json.dump({"max_failed": failed}, f, indent=1)
         print(f"baseline updated: max_failed={failed}")
+        if docs_rc != 0:
+            print("doc-sync gate failed (scripts/check_docs.py)")
+            return 1
         return 0
     baseline = 0
     if os.path.exists(BASELINE_PATH):
@@ -65,7 +83,11 @@ def check_tests(update: bool = False) -> int:
     if failed > baseline:
         print(f"REGRESSION: {failed} failures > baseline {baseline}")
         return 1
-    print(f"check_bench --tests: ok ({failed} <= baseline {baseline})")
+    if docs_rc != 0:
+        print("doc-sync gate failed (scripts/check_docs.py)")
+        return 1
+    print(f"check_bench --tests: ok ({failed} <= baseline {baseline}, "
+          f"docs in sync)")
     return 0
 
 

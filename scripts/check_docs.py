@@ -1,0 +1,103 @@
+"""Doc-sync gate: config knobs documented + README quickstart runs.
+
+    python scripts/check_docs.py                # full gate
+    python scripts/check_docs.py --no-quickstart  # skip running the snippet
+
+Fails (exit 1) if:
+
+* any field of ``repro.core.config.Config`` or its nested config
+  dataclasses (``data``/``server``/``client``/``system_heterogeneity``/
+  ``resources``/``tracking``) is not mentioned — backticked — in
+  ``docs/config.md`` (new knobs cannot land without documentation);
+* the first ```python code block in ``README.md`` (the paper-faithful
+  quickstart) does not run as-is.
+
+Wired into ``scripts/check_bench.py --tests`` so the tier-1 gate keeps
+docs and config in sync.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def undocumented_fields() -> list:
+    """Config dataclass fields missing from docs/config.md (backticked)."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.core.config import Config
+
+    with open(os.path.join(ROOT, "docs", "config.md")) as f:
+        doc = f.read()
+
+    missing = []
+    seen_types = set()
+
+    def walk(cls, prefix):
+        if cls in seen_types:
+            return
+        seen_types.add(cls)
+        for field in dataclasses.fields(cls):
+            if f"`{field.name}`" not in doc:
+                missing.append(f"{prefix}{field.name}")
+            sub = field.default_factory if field.default_factory is not \
+                dataclasses.MISSING else None
+            if sub is not None and dataclasses.is_dataclass(sub):
+                walk(sub, f"{prefix}{field.name}.")
+
+    walk(Config, "")
+    return missing
+
+
+def quickstart_snippet() -> str:
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    m = re.search(r"```python\n(.*?)```", readme, re.DOTALL)
+    if not m:
+        raise SystemExit("README.md has no ```python quickstart block")
+    return m.group(1)
+
+
+def run_quickstart() -> int:
+    snippet = quickstart_snippet()
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    r = subprocess.run([sys.executable, "-c", snippet], cwd=ROOT, env=env,
+                       capture_output=True, text=True, timeout=600)
+    if r.returncode != 0:
+        print("README quickstart failed to run as-is:")
+        print(r.stdout)
+        print(r.stderr)
+    return r.returncode
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-quickstart", action="store_true",
+                    help="only check docs/config.md field coverage")
+    args = ap.parse_args()
+
+    failures = 0
+    missing = undocumented_fields()
+    if missing:
+        failures += 1
+        print("config fields missing from docs/config.md: "
+              + ", ".join(missing))
+    else:
+        print("check_docs: all config fields documented in docs/config.md")
+    if not args.no_quickstart:
+        if run_quickstart() != 0:
+            failures += 1
+        else:
+            print("check_docs: README quickstart runs as-is")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

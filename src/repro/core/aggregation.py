@@ -54,6 +54,26 @@ def weighted_average(updates: List[PyTree], weights: np.ndarray,
     return jax.tree_util.tree_map(avg, *updates)
 
 
+def staleness_weighted_delta(updates: List[PyTree],
+                             num_samples: Sequence[int],
+                             staleness: Sequence[float],
+                             power: float = 0.5,
+                             use_kernel: bool = False) -> PyTree:
+    """FedBuff-style aggregate: sample-weighted mean with stale updates
+    discounted by ``1/(1+s)^power`` (Nguyen et al., AISTATS'22).
+
+    ``staleness[i]`` counts server aggregations between update i's dispatch
+    and now (0 = trained on the current model).  The discount is a pure
+    weight transform (``kernels.fedavg_agg.fold_staleness``), so the
+    streaming Pallas kernel and the sharded psum path are reused unchanged.
+    """
+    from repro.kernels.fedavg_agg import fold_staleness
+    w = np.asarray(fold_staleness(jnp.asarray(fedavg_weights(num_samples)),
+                                  jnp.asarray(staleness, jnp.float32),
+                                  power))
+    return weighted_average(updates, w, use_kernel=use_kernel)
+
+
 def apply_delta(global_params: PyTree, delta: PyTree,
                 server_lr: float = 1.0) -> PyTree:
     """Apply an aggregated update delta to the global params."""

@@ -55,7 +55,23 @@ _ctx = _Context()
 
 def init(configs: Optional[Dict[str, Any]] = None) -> Config:
     """Initialize the platform: merge configs with defaults, set up the
-    simulation environment (data manager + simulation manager)."""
+    simulation environment (data manager + simulation manager).
+
+    Args:
+        configs: nested override dict matching the ``Config`` tree (see
+            docs/config.md for every knob).  Low-code conveniences: a flat
+            ``{"dataset": ...}`` is folded into ``data.dataset``, and when
+            ``"model"`` is omitted it is derived from the dataset.  Unknown
+            keys raise ``KeyError`` (no silent typos); an unregistered
+            model name raises ``KeyError`` here, not at ``run()``.
+
+    Returns:
+        The merged, immutable :class:`repro.core.config.Config`.
+
+    Side effects: builds (or adopts a registered) federated dataset and the
+    tracking manager; resets any previous trainer.  Call :func:`reset`
+    between independent runs in one process — the context is global.
+    """
     configs = dict(configs or {})
     # low-code conveniences: allow flat {"model": ..., "dataset": ...}
     if "dataset" in configs:
@@ -82,7 +98,16 @@ def init(configs: Optional[Dict[str, Any]] = None) -> Config:
 
 
 def register_dataset(train, test=None) -> None:
-    """Register an external (already federated) dataset."""
+    """Register an external dataset.
+
+    Args:
+        train: a :class:`repro.data.fed_data.FederatedDataset` (adopted
+            directly as the training federation) or an object with a
+            ``name`` attribute to register under that name for
+            ``data.dataset`` lookup.
+        test: unused for ``FederatedDataset`` (it carries its own test
+            split); reserved for name-registered datasets.
+    """
     if isinstance(train, FederatedDataset):
         _ctx._registered_train = train
     else:
@@ -92,6 +117,14 @@ def register_dataset(train, test=None) -> None:
 
 
 def register_model(model) -> None:
+    """Register a model for ``config.model`` lookup.
+
+    Args:
+        model: an :class:`repro.models.small.FLModel` *instance* (every
+            later ``get_model`` returns that same object — jit caches are
+            keyed on model identity, so repeated runs in one process reuse
+            compiled programs) or a zero-arg factory returning one.
+    """
     _register_model(model)
     if _ctx.config is not None:
         name = getattr(model, "name", None)
@@ -100,10 +133,18 @@ def register_model(model) -> None:
 
 
 def register_server(server_cls) -> None:
+    """Use ``server_cls`` (a :class:`repro.core.server.Server` subclass,
+    e.g. ``FedBuffServer``) for subsequent ``run()``/``start_server()``
+    calls; override stages like ``selection``/``aggregation`` on it."""
     _ctx.server_cls = server_cls
 
 
 def register_client(client_cls) -> None:
+    """Use ``client_cls`` (a :class:`repro.core.client.Client` subclass)
+    for subsequent runs; override train-flow stages on it.  The batched
+    and async engines vectorize the ``train`` stage — per-client
+    ``download``/``decompression``/``train`` overrides raise there (the
+    post-train compression/encryption/upload overrides still apply)."""
     _ctx.client_cls = client_cls
 
 
@@ -113,7 +154,23 @@ def register_client(client_cls) -> None:
 
 
 def run(callback: Optional[Callable] = None) -> Dict[str, Any]:
-    """Start training (standalone or distributed per config)."""
+    """Start training per the active config (``init`` is implied).
+
+    ``resources.execution`` selects the engine: per-client sequential
+    rounds, one-program batched cohorts, or the async FedBuff event loop
+    (one history entry per buffer aggregation instead of per round).
+
+    Args:
+        callback: optional ``callback(summary)`` invoked once at the end.
+
+    Returns:
+        Summary dict: ``task_id``, ``rounds``, ``final`` (last round's
+        metrics), ``history`` (one metrics dict per round/aggregation:
+        ``round_time`` virtual seconds, ``wall_time``, ``train_loss``,
+        comm byte counters, eval metrics every ``server.test_every``; the
+        async engine adds ``virtual_time`` and ``staleness_mean/max``),
+        and ``params`` (the final global model pytree).
+    """
     if _ctx.config is None:
         init({})
     cfg = _ctx.config
@@ -154,6 +211,8 @@ def start_client(args: Optional[Dict[str, Any]] = None):
 
 
 def tracker() -> Tracker:
+    """The active tracking manager (task -> rounds -> clients metrics);
+    query with ``round_series`` / ``client_series`` / ``summary``."""
     return _ctx.tracker
 
 

@@ -1,0 +1,278 @@
+"""Asynchronous overlapping-cohort execution (FedBuff) on the batched engine.
+
+Synchronous rounds are a barrier: every selected client must finish before
+the server aggregates, so the round's virtual duration is gated by its
+slowest client.  Under realistic device heterogeneity (2-5x speed spread,
+paper §V-A) the fast clients idle most of the time.  This engine removes
+the barrier with a **discrete-event simulation** over the virtual clock:
+
+* Up to ``resources.max_concurrency`` clients are *in flight* at once.
+  Each dispatched client receives the current global model and a
+  heterogeneity-derived finish time ``now + speed_ratio * base_time``
+  (``SystemHeterogeneity.simulate_time``).  Base time is the client's
+  local step count times a calibrated **per-step cost** (the running
+  minimum of ``wave wall / wave steps`` over all waves so far, frozen per
+  event so simultaneous waves stay tied) — NOT each wave's own wall time,
+  which would charge jit-compile and the whole program-dispatch overhead
+  of a size-1 replacement wave to a single simulated client and corrupt
+  the virtual clock relative to the amortized synchronous cohort.
+* The event loop pops completions in finish-time order; every completion
+  frees a slot that is immediately refilled with replacement clients
+  carrying the *current* (possibly newer) model.
+* The server aggregates every buffer of ``K = resources.buffer_size``
+  completions with staleness-discounted FedAvg weights
+  (``w_i ∝ n_i / (1+s_i)^staleness_power`` — FedBuff, Nguyen et al.,
+  AISTATS'22), where ``s_i`` is the exact number of model versions that
+  elapsed between update i's dispatch and its application.
+
+Compute path: each dispatch wave (the replacements freed by one event,
+or the initial ``max_concurrency`` cohort) runs through
+``repro.core.batched.BatchedExecutor`` as ONE jitted micro-cohort.  Wave
+sizes are bucketed to powers of two inside the executor, so the many
+size-1 replacement waves of a heterogeneous run all hit a single compiled
+program, and the degenerate uniform-speed case (every finish time ties)
+keeps dispatching full-width waves — one program either way.
+
+Degenerate-case semantics: with ``K == max_concurrency == cohort size``
+and uniform client speeds, every wave completes at one virtual instant,
+every staleness is 0 (``fold_staleness`` then reduces to plain FedAvg
+weights), and replacement waves draw from the same selection RNG stream
+as synchronous rounds — so the model trajectory matches the synchronous
+batched path (tested to 1e-5 in ``tests/test_async_engine.py``).
+
+Bookkeeping: one history/tracking "round" per buffer aggregation, with
+``round_time`` = virtual time since the previous aggregation,
+``virtual_time`` = cumulative virtual clock, and per-client
+``dispatch_time`` / ``finish_time`` / ``staleness`` tracked through the
+tracking manager.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.core import compression as comp
+from repro.core.aggregation import (
+    staleness_weighted_delta, weighted_train_loss,
+)
+
+__all__ = ["AsyncEngine", "InFlight"]
+
+
+@dataclass(order=True)
+class InFlight:
+    """One dispatched-but-not-yet-aggregated client update.
+
+    Heap-ordered by ``(finish_time, seq)`` — ``seq`` is the global dispatch
+    counter, so simultaneous completions pop in dispatch order and the
+    degenerate uniform-speed case reproduces the synchronous cohort order
+    bit-for-bit."""
+
+    finish_time: float
+    seq: int
+    client_id: str = field(compare=False)
+    dispatch_time: float = field(compare=False)
+    version: int = field(compare=False)          # model version trained on
+    result: Dict[str, Any] = field(compare=False)
+
+
+class AsyncEngine:
+    """Virtual-clock event loop driving overlapping cohorts.
+
+    Constructed from a :class:`repro.core.rounds.Trainer` (which owns the
+    server, the :class:`repro.core.batched.BatchedExecutor`, the
+    heterogeneity simulator and the tracker); :meth:`run` executes
+    ``cfg.server.rounds`` buffer aggregations and returns one metrics dict
+    per aggregation (appended to ``Trainer.history`` by the caller).
+    """
+
+    def __init__(self, trainer):
+        self.trainer = trainer
+        self.cfg = trainer.cfg
+        self.server = trainer.server
+        self.het = trainer.het
+        self.tracker = trainer.tracker
+        res = self.cfg.resources
+        default_k = getattr(type(self.server), "buffer_size", 0)
+        self.K = (res.buffer_size or default_k
+                  or self.cfg.server.clients_per_round)
+        self.max_concurrency = (res.max_concurrency
+                                or self.cfg.server.clients_per_round)
+        self.staleness_power = res.staleness_power
+        self.version = 0                 # global model version (aggregations)
+        self._per_step_cost = None       # running-min wall/steps over waves
+        # The event loop aggregates itself (staleness-weighted FedBuff);
+        # it never calls Server.aggregation.  Refuse loudly rather than
+        # silently ignoring a custom aggregation setup (repo policy).
+        if self.cfg.server.aggregation != "fedavg":
+            from repro.core.aggregation import get_aggregator
+            get_aggregator(self.cfg.server.aggregation)  # typos: KeyError
+            raise ValueError(
+                f'resources.execution="async" aggregates with '
+                f"staleness-weighted FedAvg (FedBuff); "
+                f"server.aggregation={self.cfg.server.aggregation!r} is not "
+                f"consulted — use execution='sequential' or 'batched'")
+        from repro.core.server import Server
+        if type(self.server).aggregation is not Server.aggregation and \
+                not hasattr(type(self.server), "buffered_apply"):
+            raise ValueError(
+                f"{type(self.server).__name__}.aggregation is bypassed by "
+                f'resources.execution="async" (the event loop aggregates '
+                f"every buffer of K completions); implement "
+                f"buffered_apply(batch) (see FedBuffServer) or use a "
+                f"synchronous execution mode")
+
+    # ------------------------------------------------------------------
+    def _dispatch(self, now: float, state: Dict[str, Any]) -> None:
+        """Fill free slots with replacement clients at virtual time ``now``.
+
+        Each iteration trains one wave (<= ``server.clients_per_round``
+        clients, the selection stage's draw size) as a single jitted
+        micro-cohort via ``Trainer._run_batched``; loops until the
+        concurrency cap, the remaining completion budget, or the pool of
+        idle clients is exhausted."""
+        server, trainer = self.server, self.trainer
+        heap, in_flight = state["heap"], state["in_flight"]
+        event_cost = self._per_step_cost   # one cost per event: waves tie
+        while True:
+            free = self.max_concurrency - len(in_flight)
+            budget = (state["total_needed"] - state["completed"]
+                      - len(in_flight))
+            avail = [c for c in state["all_ids"] if c not in in_flight]
+            m = min(free, budget, len(avail))
+            if m <= 0:
+                return
+            selected = server.selection(avail, state["wave_id"])[:m]
+            if not selected:
+                return
+            payload = server.distribution(selected)
+            state["down_bytes"] += (payload.get("payload_bytes", 0)
+                                    * len(selected))
+            results, _ = trainer._run_batched(selected, payload,
+                                              state["wave_id"])
+            state["wave_id"] += 1
+            wall = sum(r["train_time"] for r in results)
+            steps = sum(r["metrics"]["batches"] for r in results)
+            cost = wall / max(steps, 1.0)
+            self._per_step_cost = (cost if self._per_step_cost is None
+                                   else min(self._per_step_cost, cost))
+            if event_cost is None:
+                event_cost = self._per_step_cost
+            for res in results:
+                cid = res["client_id"]
+                base = res["metrics"]["batches"] * event_cost
+                duration = self.het.simulate_time(cid, base)
+                state["up_bytes"] += (
+                    res["payload_bytes"] if "payload_bytes" in res
+                    else comp.payload_bytes(res["update"]))
+                heapq.heappush(heap, InFlight(
+                    finish_time=now + duration, seq=state["seq"],
+                    client_id=cid, dispatch_time=now,
+                    version=self.version, result=res))
+                state["seq"] += 1
+                in_flight.add(cid)
+
+    # ------------------------------------------------------------------
+    def _aggregate(self, batch: List[InFlight], now: float,
+                   state: Dict[str, Any]) -> Dict[str, float]:
+        """Apply one buffer of K completions; returns the round metrics."""
+        staleness = np.asarray([self.version - e.version for e in batch],
+                               np.float32)
+        results = [e.result for e in batch]
+        if hasattr(type(self.server), "buffered_apply"):
+            # FedBuff-family servers own the weighted application (and any
+            # subclass customization of it)
+            for e, s in zip(batch, staleness):
+                e.result["_staleness"] = float(s)
+            self.server.buffered_apply(results)
+        else:
+            updates = [comp.decompress(r["update"]) for r in results]
+            delta = staleness_weighted_delta(
+                updates, [r["num_samples"] for r in results], staleness,
+                power=self.staleness_power,
+                use_kernel=self.cfg.resources.aggregation_kernel)
+            self.server.apply_delta(delta)
+        self.version += 1
+
+        agg_id = self.version - 1
+        wall = time.perf_counter() - state["t_wall"]
+        state["t_wall"] = time.perf_counter()
+        metrics = {
+            "round_time": now - state["last_agg_time"],
+            "virtual_time": now,
+            "wall_time": wall,
+            "clients": len(batch),
+            "comm_down_bytes": state["down_bytes"],
+            "comm_up_bytes": state["up_bytes"],
+            "train_loss": weighted_train_loss(results),
+            "staleness_mean": float(staleness.mean()),
+            "staleness_max": float(staleness.max()),
+            "in_flight": len(state["in_flight"]),
+        }
+        state["last_agg_time"] = now
+        state["down_bytes"] = 0
+        state["up_bytes"] = 0
+        if self.cfg.server.test_every and \
+           (agg_id + 1) % self.cfg.server.test_every == 0:
+            metrics.update(self.server.test())
+        if self.cfg.tracking.enabled:
+            self.tracker.track_round(self.cfg.task_id, agg_id, **metrics)
+            for e, s in zip(batch, staleness):
+                self.tracker.track_client(
+                    self.cfg.task_id, agg_id, e.client_id,
+                    train_time=e.result["train_time"],
+                    simulated_time=e.finish_time - e.dispatch_time,
+                    dispatch_time=e.dispatch_time,
+                    finish_time=e.finish_time,
+                    staleness=float(s),
+                    **e.result["metrics"])
+        return metrics
+
+    # ------------------------------------------------------------------
+    def run(self) -> List[Dict[str, float]]:
+        """Run ``cfg.server.rounds`` buffer aggregations; returns history.
+
+        The completion budget is sized so the loop drains exactly —
+        ``rounds * K`` completions are dispatched in total and no trained
+        update is discarded.  If the client pool is too small to ever fill
+        a buffer (loop starves), the partial buffer is flushed at the end,
+        mirroring ``Server.finalize`` semantics."""
+        state: Dict[str, Any] = {
+            "heap": [], "in_flight": set(),
+            "all_ids": list(self.trainer.fed_data.client_ids),
+            "seq": 0, "wave_id": 0, "completed": 0,
+            "total_needed": self.cfg.server.rounds * self.K,
+            "down_bytes": 0, "up_bytes": 0,
+            "last_agg_time": 0.0, "t_wall": time.perf_counter(),
+        }
+        heap = state["heap"]
+        buffer: List[InFlight] = []
+        history: List[Dict[str, float]] = []
+        now = 0.0
+
+        self._dispatch(0.0, state)
+        while len(history) < self.cfg.server.rounds and heap:
+            # pop the earliest completion plus every tie (simultaneous
+            # finishes — the whole wave in the uniform-speed case) so
+            # aggregation happens before their replacements dispatch
+            entry = heapq.heappop(heap)
+            ties = [entry]
+            while heap and heap[0].finish_time == entry.finish_time:
+                ties.append(heapq.heappop(heap))
+            now = entry.finish_time
+            for e in ties:
+                state["in_flight"].discard(e.client_id)
+                state["completed"] += 1
+                buffer.append(e)
+            while len(buffer) >= self.K and \
+                    len(history) < self.cfg.server.rounds:
+                batch, buffer = buffer[: self.K], buffer[self.K:]
+                history.append(self._aggregate(batch, now, state))
+            self._dispatch(now, state)
+        if buffer and len(history) < self.cfg.server.rounds:
+            history.append(self._aggregate(buffer, now, state))
+        return history

@@ -18,8 +18,10 @@ Shape discipline (no per-round recompiles):
   masked out (params/opt-state frozen once ``step >= n_steps[client]``), so
   results are bit-equivalent to running each client alone.
 
-Per-client FedProx (``proximal_mu``) and gradient clipping
-(``max_grad_norm``) ride along as traced (N,) vectors, so ``FedAvg``,
+Per-client FedProx (``proximal_mu``), gradient clipping
+(``max_grad_norm``) and learning rates (``lr_scale``, relative to the
+shared optimizer's lr — exact because both optimizer families apply lr as
+a final linear factor) ride along as traced (N,) vectors, so ``FedAvg``,
 ``FedProx`` and ``STC`` strategies all share one program (STC only changes
 the post-train compression stage, which stays on the per-client Python
 path).  The stacked initial params are donated to the program — XLA reuses
@@ -116,8 +118,14 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
     Signature of the returned function (leading dim N_bucket everywhere
     except ``global_params``):
 
-        (params, x, y, idx, n_steps, mu, max_norm, global_params)
+        (params, x, y, idx, n_steps, mu, max_norm, lr_scale, global_params)
             -> (updates, loss_mean, acc_mean)
+
+    ``lr_scale`` is the per-client learning-rate multiplier relative to the
+    shared ``optimizer``'s baked-in lr (1.0 = uniform cohort).  Both
+    optimizers here (SGD incl. momentum/nesterov/weight-decay, AdamW) apply
+    lr as a final linear factor of the step, so scaling the returned update
+    is exactly equivalent to building the optimizer with ``lr * scale``.
 
     ``params`` (the stacked copies of the global model) is donated.
     With ``mesh`` (1-D, axis "clients"), every leading-client-dim argument
@@ -126,7 +134,8 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
     devices; N_bucket must be a multiple of the mesh size.
     """
 
-    def one_client(params, x, y, idx, n_steps, mu, max_norm, global_params):
+    def one_client(params, x, y, idx, n_steps, mu, max_norm, lr_scale,
+                   global_params):
         opt_state = optimizer.init(params)
 
         def body(carry, xs):
@@ -154,6 +163,7 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
                     jnp.minimum(1.0, max_norm / (norm + 1e-9)), 1.0)
                 grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
             updates, new_opt = optimizer.update(grads, opt_state, params)
+            updates = jax.tree_util.tree_map(lambda u: u * lr_scale, updates)
             new_params = apply_updates(params, updates)
 
             active = step < n_steps          # padded steps leave state frozen
@@ -177,7 +187,7 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
         return update, loss_sum / denom, acc_sum / denom
 
     batched = jax.vmap(one_client,
-                       in_axes=(0, 0, 0, 0, 0, 0, 0, None))
+                       in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None))
     if mesh is None:
         return jax.jit(batched, donate_argnums=(0,))
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -185,7 +195,7 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
     cl = NamedSharding(mesh, P(CLIENT_AXIS))   # shard the leading client dim
     rep = NamedSharding(mesh, P())             # replicate
     return jax.jit(batched,
-                   in_shardings=(cl, cl, cl, cl, cl, cl, cl, rep),
+                   in_shardings=(cl, cl, cl, cl, cl, cl, cl, cl, rep),
                    out_shardings=(cl, cl, cl),
                    donate_argnums=(0,))
 
@@ -222,6 +232,43 @@ class BatchedExecutor:
         return np.concatenate(rows).astype(np.int32)
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _cohort_optimizer(clients: Sequence):
+        """Resolve the cohort's shared optimizer + per-client lr ratios.
+
+        Instance identity is the fast path: ``get_optimizer()`` lru-caches,
+        so clients with identical hyperparameters share one Optimizer
+        object.  Distinct instances are allowed iff they come from the
+        client configs (no hand-swapped ``self.optimizer``) and differ
+        ONLY in learning rate: both optimizer families here apply lr as a
+        final linear factor of the step, so the cohort program runs one
+        shared optimizer (the first client's) and scales each client's
+        update by ``lr_i / lr_0`` — exact, not an approximation.  Anything
+        else (mixed family/momentum/weight-decay, custom optimizer objects)
+        cannot share one program and raises."""
+        from repro.optim import get_optimizer
+
+        if len({id(c.optimizer) for c in clients}) == 1:
+            return clients[0].optimizer, None
+        from_cfg = all(
+            c.optimizer is get_optimizer(c.cfg.optimizer, c.cfg.lr,
+                                         c.cfg.momentum, c.cfg.weight_decay)
+            for c in clients)
+        families = {(c.cfg.optimizer, c.cfg.momentum, c.cfg.weight_decay)
+                    for c in clients}
+        lr0 = clients[0].cfg.lr
+        if not from_cfg or len(families) != 1 or lr0 <= 0 or \
+                any(c.cfg.lr < 0 for c in clients):
+            raise ValueError(
+                "batched execution needs one shared optimizer across the "
+                "cohort (per-client learning rates are the only vectorized "
+                "hyperparameter), got "
+                f"{sorted({c.optimizer.name for c in clients})}; "
+                "use resources.execution='sequential'")
+        ratios = np.asarray([c.cfg.lr / lr0 for c in clients], np.float32)
+        return clients[0].optimizer, ratios
+
+    # ------------------------------------------------------------------
     def run_cohort_stacked(self, clients: Sequence, global_params: PyTree,
                            round_id: int) -> Dict[str, Any]:
         """Train the cohort and return the *stacked* results.
@@ -239,17 +286,7 @@ class BatchedExecutor:
                 f"batched execution needs a uniform batch size, got "
                 f"{sorted(batch_sizes)}")
         B = batch_sizes.pop()
-        # Instance identity, not name: get_optimizer() lru-caches, so clients
-        # with identical hyperparameters share one Optimizer object; distinct
-        # objects mean distinct lr/momentum/weight_decay, which one shared
-        # program cannot honor.
-        opts = {id(c.optimizer) for c in clients}
-        if len(opts) != 1:
-            raise ValueError(
-                "batched execution needs one shared optimizer instance "
-                "(uniform hyperparameters) across the cohort, got "
-                f"{sorted({c.optimizer.name for c in clients})}")
-        optimizer = clients[0].optimizer
+        optimizer, lr_ratios = self._cohort_optimizer(clients)
 
         N = len(clients)
         Nb = bucket_pow2(N)
@@ -267,6 +304,9 @@ class BatchedExecutor:
         n_steps = np.zeros((Nb,), dtype=np.int32)
         mu = np.zeros((Nb,), dtype=np.float32)
         max_norm = np.zeros((Nb,), dtype=np.float32)
+        lr_scale = np.ones((Nb,), dtype=np.float32)  # padded clients inert
+        if lr_ratios is not None:
+            lr_scale[: len(clients)] = lr_ratios
         for i, c in enumerate(clients):
             n = len(c.data)
             x[i, :n] = c.data.x
@@ -297,7 +337,7 @@ class BatchedExecutor:
             updates, loss, acc = program(
                 stacked, jnp.asarray(x), jnp.asarray(y), jnp.asarray(idx),
                 jnp.asarray(n_steps), jnp.asarray(mu), jnp.asarray(max_norm),
-                global_params)
+                jnp.asarray(lr_scale), global_params)
         jax.block_until_ready(updates)
         wall = time.perf_counter() - t0
 
@@ -314,6 +354,22 @@ class BatchedExecutor:
     # ------------------------------------------------------------------
     def run_cohort(self, clients: Sequence, global_params: PyTree,
                    round_id: int) -> List[Dict[str, Any]]:
+        """Train ``clients`` as one jitted program; per-client results.
+
+        Args:
+            clients: cohort of :class:`repro.core.client.Client`s (uniform
+                batch size and optimizer family; per-client lr/mu/clip are
+                vectorized — anything else raises ``ValueError``).
+            global_params: the global model pytree every client starts
+                from.
+            round_id: seeds each client's epoch/batch shuffle exactly like
+                the sequential path (the async engine passes its wave id).
+
+        Returns:
+            One ``Client.train``-shaped dict per client (``update``,
+            ``num_samples``, ``metrics``, ``train_time``), in cohort
+            order — ready for the compression/encryption/upload stages.
+        """
         if not clients:
             return []
         st = self.run_cohort_stacked(clients, global_params, round_id)

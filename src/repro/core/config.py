@@ -167,8 +167,18 @@ class ResourceConfig:
       ``repro.core.batched``).  Round wall time stops scaling with cohort
       size; per-client virtual times are derived from step counts scaled by
       the measured per-step cost.  Requires a uniform batch size and
-      optimizer across the cohort; custom ``train``-stage overrides are not
-      consulted (compression/encryption/upload overrides still are).
+      optimizer family across the cohort (per-client learning rates are
+      vectorized); custom ``train``-stage overrides are not consulted
+      (compression/encryption/upload overrides still are).
+    * ``"async"`` — FedBuff-style overlapping cohorts on a virtual-clock
+      event loop (``repro.core.async_engine``): up to ``max_concurrency``
+      clients are in flight at once, each completion frees a slot that is
+      immediately refilled with the *current* global model, and the server
+      aggregates every buffer of ``buffer_size`` completions with
+      staleness-discounted weights (``w_i ∝ n_i / (1+s_i)^staleness_power``).
+      Each dispatch wave runs through the batched vmap+scan executor as one
+      jitted micro-cohort, so waves of equal bucketed shape reuse one
+      compiled program.  Requires ``distributed="none"``.
 
     ``aggregation_kernel`` switches the FedAvg weighted average onto the
     chunked streaming Pallas kernel (``repro.kernels.fedavg_agg``); the
@@ -192,8 +202,14 @@ class ResourceConfig:
     default_client_time: float = 1.0  # t: default training time before profiling
     momentum: float = 0.5             # m: moving-average momentum for t update
     distributed: str = "none"         # none | data (shard cohort over mesh)
-    execution: str = "sequential"     # sequential | batched
+    execution: str = "sequential"     # sequential | batched | async
     aggregation_kernel: bool = False  # FedAvg via the Pallas streaming kernel
+    # --- async (execution="async") knobs ---
+    buffer_size: int = 0              # K: aggregate every K completions
+    #                                   (0 -> server.clients_per_round)
+    max_concurrency: int = 0          # concurrent in-flight clients
+    #                                   (0 -> server.clients_per_round)
+    staleness_power: float = 0.5      # a in w ∝ 1/(1+staleness)^a (0 = off)
 
 
 @dataclass(frozen=True)

@@ -50,22 +50,34 @@ class Trainer:
         self.server = server or Server(model, config, fed_data.test)
         self.client_cls = client_cls
         self.clients: Dict[str, Client] = {}
-        if config.resources.execution not in ("sequential", "batched"):
+        res = config.resources
+        if res.execution not in ("sequential", "batched", "async"):
             raise ValueError(
-                f"unknown execution {config.resources.execution!r}; "
-                f"expected 'sequential' or 'batched'")
-        if config.resources.distributed not in ("none", "data"):
+                f"unknown execution {res.execution!r}; "
+                f"expected 'sequential', 'batched' or 'async'")
+        if res.distributed not in ("none", "data"):
             raise ValueError(
-                f"unknown distributed {config.resources.distributed!r}; "
+                f"unknown distributed {res.distributed!r}; "
                 f"expected 'none' or 'data'")
-        if config.resources.distributed == "data" and \
-                config.resources.execution != "batched":
+        if res.distributed == "data" and res.execution != "batched":
             raise ValueError(
                 'resources.distributed="data" shards the batched engine; '
                 'set resources.execution="batched"')
-        self.engine = (BatchedExecutor(model,
-                                       distributed=config.resources.distributed)
-                       if config.resources.execution == "batched" else None)
+        if res.buffer_size < 0:
+            raise ValueError(
+                f"resources.buffer_size must be >= 0 (0 = use "
+                f"server.clients_per_round), got {res.buffer_size}")
+        if res.max_concurrency < 0:
+            raise ValueError(
+                f"resources.max_concurrency must be >= 0 (0 = use "
+                f"server.clients_per_round), got {res.max_concurrency}")
+        if res.staleness_power < 0:
+            raise ValueError(
+                f"resources.staleness_power must be >= 0 (0 disables the "
+                f"staleness discount), got {res.staleness_power}")
+        # async dispatch waves run through the batched executor too
+        self.engine = (BatchedExecutor(model, distributed=res.distributed)
+                       if res.execution in ("batched", "async") else None)
         self.het = SystemHeterogeneity(config.system_heterogeneity)
         self.scheduler = GreedyAda(
             num_devices=max(1, config.resources.num_devices),
@@ -163,6 +175,10 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def run_round(self, round_id: int) -> Dict[str, float]:
+        if self.cfg.resources.execution == "async":
+            raise ValueError(
+                'resources.execution="async" replaces the synchronous round '
+                "loop with an event loop; call Trainer.run()")
         server = self.server
         selected = server.selection(self.fed_data.client_ids, round_id)
         payload = server.distribution(selected)
@@ -232,8 +248,12 @@ class Trainer:
         if self.cfg.tracking.enabled:
             from repro.core.config import to_dict
             self.tracker.create_task(self.cfg.task_id, to_dict(self.cfg))
-        for r in range(self.cfg.server.rounds):
-            self.run_round(r)
+        if self.cfg.resources.execution == "async":
+            from repro.core.async_engine import AsyncEngine
+            self.history.extend(AsyncEngine(self).run())
+        else:
+            for r in range(self.cfg.server.rounds):
+                self.run_round(r)
         self.server.finalize()
         summary = {
             "task_id": self.cfg.task_id,

@@ -2,16 +2,28 @@
 AISTATS'22] — an *aggregation-stage* plugin with staleness weighting.
 
 In the asynchronous regime the server applies an aggregate as soon as K
-client updates have arrived, weighting each by 1/sqrt(1+staleness) (rounds
-elapsed since the update's base model).  The simulation runtime delivers
-results round-synchronously, so staleness starts from the virtual clock —
-a client whose simulated time exceeds the round's median arrives one round
-stale — and then *ages*: updates left in the buffer because fewer than K
-have accumulated carry over to later rounds, their staleness incremented
-once per round held, so a K=5 buffer fed 3 updates/round genuinely defers
-aggregation instead of flushing every round.  ``finalize()`` (called by
-the runtime after the last round) flushes whatever remains so no update is
-ever dropped."""
+client updates have arrived, weighting each by 1/(1+staleness)^a (model
+versions elapsed since the update's base model; a=0.5 reproduces the
+paper's 1/sqrt discount and is configurable via
+``resources.staleness_power``).
+
+Two runtimes drive this server:
+
+* **Round-synchronous** (``resources.execution`` sequential/batched): the
+  runtime delivers results per round, so staleness starts from the virtual
+  clock — a client whose simulated time exceeds the round's median arrives
+  one round stale — and then *ages*: updates left in the buffer because
+  fewer than K have accumulated carry over to later rounds, their
+  staleness incremented once per round held, so a K=5 buffer fed 3
+  updates/round genuinely defers aggregation instead of flushing every
+  round.  ``finalize()`` (called by the runtime after the last round)
+  flushes whatever remains so no update is ever dropped.
+
+* **Event-loop asynchronous** (``resources.execution = "async"``): the
+  virtual-clock event loop in ``repro.core.async_engine`` owns the buffer
+  and the *exact* model-version staleness of each completion; it calls
+  :meth:`buffered_apply` directly with ``_staleness`` already set, so
+  this class only supplies the staleness-weighted application."""
 from __future__ import annotations
 
 from typing import Any, Dict, List
@@ -20,7 +32,7 @@ import numpy as np
 
 from repro.core import compression as comp
 from repro.core.aggregation import (
-    apply_delta, fedavg_weights, weighted_average,
+    apply_delta, staleness_weighted_delta,
 )
 from repro.core.server import Server
 
@@ -31,6 +43,8 @@ class FedBuffServer(Server):
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         self._buffer: List[Dict[str, Any]] = []
+        if self.cfg.resources.buffer_size > 0:
+            self.buffer_size = self.cfg.resources.buffer_size
 
     def aggregation(self, results: List[Dict[str, Any]]) -> None:
         # age carried-over updates first: one more round has now elapsed
@@ -56,10 +70,19 @@ class FedBuffServer(Server):
             self._apply(self._buffer)
             self._buffer = []
 
+    def buffered_apply(self, batch: List[Dict[str, Any]]) -> None:
+        """Apply one buffer of results, each carrying ``_staleness``.
+
+        Public entry point for the async event loop
+        (``repro.core.async_engine``), which manages its own buffer and
+        true model-version staleness."""
+        self._apply(batch)
+
     def _apply(self, batch: List[Dict[str, Any]]) -> None:
         updates = [comp.decompress(r["update"]) for r in batch]
-        w = fedavg_weights([r["num_samples"] for r in batch])
-        w = w / np.sqrt(1.0 + np.array([r["_staleness"] for r in batch]))
-        w = (w / w.sum()).astype(np.float32)
-        delta = weighted_average(updates, w)
+        delta = staleness_weighted_delta(
+            updates, [r["num_samples"] for r in batch],
+            np.asarray([r["_staleness"] for r in batch], np.float32),
+            power=self.cfg.resources.staleness_power,
+            use_kernel=self.cfg.resources.aggregation_kernel)
         self.params = apply_delta(self.params, delta)

@@ -20,11 +20,18 @@ zero rows before the jitted inner call, so per-round cohort-size jitter
 (e.g. 97, 100, 103 selected clients) hits one compiled program instead of
 recompiling every round.  Zero-padding leaves the weighted sum unchanged and
 keeps the weight total at 1.
+
+Asynchronous (FedBuff-style) aggregation reuses both entry points unchanged:
+staleness discounting is a *weight transform* (``fold_staleness``), applied
+before bucket padding, so the streaming kernel and the mesh-sharded psum
+path never see staleness — just a different normalized weight vector.  Both
+``fedavg_aggregate`` and ``fedavg_aggregate_sharded`` accept an optional
+per-client ``staleness`` vector and fold it in-place.
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +62,29 @@ def pad_cohort(updates: jnp.ndarray, weights: jnp.ndarray,
         return updates, weights
     return (jnp.pad(updates, ((0, nb - n), (0, 0))),
             jnp.pad(weights, (0, nb - n)))
+
+
+def fold_staleness(weights: jnp.ndarray, staleness: jnp.ndarray,
+                   power: float = 0.5) -> jnp.ndarray:
+    """Fold a staleness discount into a normalized weight vector.
+
+    Args:
+        weights: (N,) non-negative aggregation weights (e.g. FedAvg
+            sample-count weights).
+        staleness: (N,) model-version lag of each update — how many server
+            aggregations happened between the update's dispatch and its
+            application (0 = trained on the current model).
+        power: discount exponent ``a``; each weight is scaled by
+            ``1/(1+s)^a`` (FedBuff uses a=0.5; 0 disables discounting).
+
+    Returns:
+        (N,) f32 weights, rescaled to sum to 1 so downstream weighted sums
+        (kernel, einsum, sharded psum) stay a convex combination.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(staleness, jnp.float32)
+    w = w * (1.0 + s) ** jnp.float32(-power)
+    return w / jnp.sum(w)
 
 
 def _agg_kernel(w_ref, u_ref, o_ref):
@@ -97,33 +127,68 @@ def _aggregate_padded(updates: jnp.ndarray, weights: jnp.ndarray,
 
 def fedavg_aggregate(updates: jnp.ndarray, weights: jnp.ndarray,
                      interpret: bool = True, tile_d: int = TILE_D,
-                     tile_n: int = TILE_N) -> jnp.ndarray:
-    """updates: (N, D); weights: (N,) summing to 1 -> (D,) f32.
+                     tile_n: int = TILE_N,
+                     staleness: Optional[jnp.ndarray] = None,
+                     staleness_power: float = 0.5) -> jnp.ndarray:
+    """Streaming weighted sum of client updates.
 
-    ``interpret=True`` executes the kernel body on CPU (this container);
-    on TPU pass interpret=False for the compiled kernel.  N is bucket-padded
-    *outside* the jitted inner function so varying per-round cohort sizes
+    Args:
+        updates: (N, D) f32 — one flattened update vector per client.
+        weights: (N,) aggregation weights summing to 1 (FedAvg sample
+            weights; see :func:`repro.core.aggregation.fedavg_weights`).
+        interpret: True executes the kernel body on CPU (this container);
+            on TPU pass False for the compiled kernel.
+        tile_d, tile_n: VMEM block shape; peak VMEM is tile_n*tile_d*4 B
+            regardless of N.
+        staleness: optional (N,) per-update staleness; when given, weights
+            are rescaled by ``1/(1+s)^staleness_power`` and renormalized
+            (:func:`fold_staleness`) before padding — the async FedBuff path.
+        staleness_power: discount exponent for ``staleness``.
+
+    Returns:
+        (D,) f32 weighted average.
+
+    N is bucket-padded (power-of-two multiples of ``tile_n``, zero weights)
+    *outside* the jitted inner function, so varying per-round cohort sizes
     within one bucket reuse a single compiled program.
     """
+    weights = weights.astype(jnp.float32)
+    if staleness is not None:
+        weights = fold_staleness(weights, staleness, staleness_power)
     updates, weights = pad_cohort(updates.astype(jnp.float32),
-                                  weights.astype(jnp.float32), tile_n)
+                                  weights, tile_n)
     return _aggregate_padded(updates, weights, interpret, tile_d, tile_n)
 
 
 def fedavg_aggregate_sharded(updates: jnp.ndarray, weights: jnp.ndarray,
                              mesh, axis: str = "clients",
                              interpret: bool = True, tile_d: int = TILE_D,
-                             tile_n: int = TILE_N) -> jnp.ndarray:
+                             tile_n: int = TILE_N,
+                             staleness: Optional[jnp.ndarray] = None,
+                             staleness_power: float = 0.5) -> jnp.ndarray:
     """Mesh-sharded weighted sum: per-shard partials + ``psum`` epilogue.
 
-    ``updates``: (N, D) with the client dim sharded (or shardable) over the
-    1-D ``mesh``; ``weights``: (N,) summing to 1.  Each shard streams its
-    own client rows through the chunked accumulation (so no device ever
-    materializes another shard's updates), then one ``psum`` of the (D,)
-    partial weighted sums — D·4 bytes per device instead of moving all
-    N·D·4 update bytes to one device.  N is zero-padded to a power-of-two
-    multiple of ``tile_n * mesh.size`` so shards stay equal and padded rows
-    contribute nothing.
+    Args:
+        updates: (N, D) with the client dim sharded (or shardable) over the
+            1-D ``mesh``.
+        weights: (N,) aggregation weights summing to 1.
+        mesh: 1-D ``jax.sharding.Mesh`` whose single axis is ``axis``.
+        axis: mesh axis name carrying the client dimension.
+        interpret, tile_d, tile_n: as in :func:`fedavg_aggregate`.
+        staleness, staleness_power: optional per-update staleness discount,
+            folded into ``weights`` (:func:`fold_staleness`) before
+            sharding/padding — the async FedBuff path reuses this function
+            unchanged.
+
+    Returns:
+        (D,) f32 weighted average, replicated on every device.
+
+    Each shard streams its own client rows through the chunked
+    accumulation (so no device ever materializes another shard's updates),
+    then one ``psum`` of the (D,) partial weighted sums — D·4 bytes per
+    device instead of moving all N·D·4 update bytes to one device.  N is
+    zero-padded to a power-of-two multiple of ``tile_n * mesh.size`` so
+    shards stay equal and padded rows contribute nothing.
     """
     if len(mesh.axis_names) != 1 or mesh.axis_names[0] != axis:
         raise ValueError(
@@ -132,6 +197,8 @@ def fedavg_aggregate_sharded(updates: jnp.ndarray, weights: jnp.ndarray,
     nshards = mesh.size
     updates = updates.astype(jnp.float32)
     weights = weights.astype(jnp.float32)
+    if staleness is not None:
+        weights = fold_staleness(weights, staleness, staleness_power)
     updates, weights = pad_cohort(updates, weights, tile_n * nshards)
     return _sharded_program(mesh, axis, interpret, tile_d, tile_n)(
         weights, updates)

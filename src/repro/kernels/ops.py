@@ -38,9 +38,11 @@ def get_interpret(interpret: Optional[bool] = None) -> bool:
     return os.environ.get("REPRO_KERNEL_INTERPRET", "1") != "0"
 
 
-def fedavg_aggregate(updates, weights, interpret: bool = None):
+def fedavg_aggregate(updates, weights, interpret: bool = None,
+                     staleness=None, staleness_power: float = 0.5):
     return fedavg_agg.fedavg_aggregate(
-        updates, weights, interpret=get_interpret(interpret))
+        updates, weights, interpret=get_interpret(interpret),
+        staleness=staleness, staleness_power=staleness_power)
 
 
 def stc_compress(x, keep_frac: float = 0.01, interpret: bool = None):

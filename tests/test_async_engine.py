@@ -1,0 +1,326 @@
+"""Async overlapping-cohort execution (``resources.execution = "async"``).
+
+* degenerate case (K = cohort size, uniform client speeds): the event loop
+  reproduces the synchronous batched path's model trajectory exactly;
+* heterogeneous client speeds (>= 2x spread): async simulated wall-clock
+  beats the synchronous straggler barrier for the same update budget;
+* staleness folding: the kernel/sharded aggregation paths consume the
+  staleness discount as a pure weight transform;
+* loud errors for the new resources knobs; dispatch/finish timestamps in
+  the tracking manager; concurrency cap respected.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro as easyfl
+from repro.core.async_engine import AsyncEngine
+from repro.core.config import Config
+from repro.core.rounds import Trainer
+from repro.core.server import Server
+from repro.data.fed_data import build_federated_data
+from repro.kernels import ref
+from repro.kernels.fedavg_agg import fedavg_aggregate, fold_staleness
+from repro.models.registry import get_model
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _run_api(resources, rounds=3, clients_per_round=5):
+    easyfl.reset()
+    easyfl.init({
+        "model": "linear", "dataset": "synthetic",
+        "data": {"num_clients": 12, "batch_size": 32},
+        "server": {"rounds": rounds, "clients_per_round": clients_per_round},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "resources": resources,
+    })
+    res = easyfl.run()
+    easyfl.reset()
+    return res
+
+
+def _make_trainer(model, resources, server_over=None, ratios=None,
+                  num_clients=8, server_cls=Server):
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": num_clients,
+                 "batch_size": 32},
+        "server": {"clients_per_round": num_clients, "test_every": 0,
+                   **(server_over or {})},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "system_heterogeneity": {"enabled": ratios is not None},
+        "resources": resources,
+        "tracking": {"enabled": False},
+    })
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed,
+                      server=server_cls(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(0))
+    if ratios is not None:
+        # deterministic device classes (hash()-based assignment is
+        # process-randomized): alternate fast/slow across the sorted pool
+        for i, cid in enumerate(sorted(fed.client_ids)):
+            trainer.het.assignment[cid] = ratios[i % len(ratios)]
+    return trainer
+
+
+# ---------------------------------------------------------------------------
+# degenerate case == synchronous batched path
+# ---------------------------------------------------------------------------
+
+
+def test_async_degenerate_matches_batched_sync():
+    """K = cohort size, uniform speeds, max_concurrency = cohort size:
+    every wave completes at one virtual instant with staleness 0, so the
+    model trajectory must match synchronous batched rounds."""
+    rb = _run_api({"execution": "batched"})
+    ra = _run_api({"execution": "async", "buffer_size": 5,
+                   "max_concurrency": 5})
+    for a, b in zip(jax.tree_util.tree_leaves(rb["params"]),
+                    jax.tree_util.tree_leaves(ra["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        [h["train_loss"] for h in rb["history"]],
+        [h["train_loss"] for h in ra["history"]], rtol=1e-4)
+    np.testing.assert_allclose(
+        [h["accuracy"] for h in rb["history"]],
+        [h["accuracy"] for h in ra["history"]], atol=1e-5)
+    assert all(h["staleness_max"] == 0.0 for h in ra["history"])
+    assert all(h["clients"] == 5 for h in ra["history"])
+
+
+def test_async_default_knobs_resolve_to_cohort_size():
+    model = get_model("linear")
+    trainer = _make_trainer(model, {"execution": "async"},
+                            {"rounds": 1, "clients_per_round": 8})
+    eng = AsyncEngine(trainer)
+    assert eng.K == 8 and eng.max_concurrency == 8
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous speeds: async beats the straggler barrier
+# ---------------------------------------------------------------------------
+
+
+def test_async_beats_sync_virtual_time_under_heterogeneity(monkeypatch):
+    """Same update budget (32 completions), 4x speed spread: the async
+    event loop's simulated wall-clock must beat synchronous rounds, whose
+    every round is gated by a slow client.
+
+    The measured program wall time is pinned to a fixed per-step cost so
+    the virtual clocks are fully deterministic (host timing noise — e.g.
+    a loaded CI box — must not flip a structural ~2.3x gap)."""
+    from repro.core.batched import BatchedExecutor
+
+    orig = BatchedExecutor.run_cohort_stacked
+
+    def fixed_wall(self, clients, params, round_id):
+        st = orig(self, clients, params, round_id)
+        st["wall"] = float(st["n_steps"].sum()) * 1e-4
+        return st
+
+    monkeypatch.setattr(BatchedExecutor, "run_cohort_stacked", fixed_wall)
+    model = get_model("linear")
+    ratios = (1.0, 4.0)
+    rs = _make_trainer(model, {"execution": "batched",
+                               "allocation": "one_per_device"},
+                       {"rounds": 4}, ratios).run()
+    ra = _make_trainer(model, {"execution": "async", "buffer_size": 4,
+                               "max_concurrency": 8},
+                       {"rounds": 8}, ratios).run()
+
+    assert sum(h["clients"] for h in rs["history"]) == \
+        sum(h["clients"] for h in ra["history"]) == 32
+    v_sync = sum(h["round_time"] for h in rs["history"])
+    v_async = sum(h["round_time"] for h in ra["history"])
+    assert v_async < v_sync, (
+        f"async virtual time {v_async:.4f}s should beat sync {v_sync:.4f}s "
+        f"under {max(ratios) / min(ratios):.0f}x heterogeneity")
+    assert v_sync / v_async > 1.5     # structural gap, not noise-level
+    # overlapping cohorts genuinely produce stale updates
+    assert max(h["staleness_max"] for h in ra["history"]) > 0
+
+
+def test_async_respects_concurrency_cap_and_budget(monkeypatch):
+    model = get_model("linear")
+    trainer = _make_trainer(model, {"execution": "async", "buffer_size": 3,
+                                    "max_concurrency": 4},
+                            {"rounds": 4, "clients_per_round": 6},
+                            ratios=(1.0, 2.0, 5.0))
+    waves = []
+    orig = Trainer._run_batched
+
+    def spy(self, selected, payload, round_id):
+        waves.append(list(selected))
+        return orig(self, selected, payload, round_id)
+
+    monkeypatch.setattr(Trainer, "_run_batched", spy)
+    res = trainer.run()
+    assert all(len(w) <= 4 for w in waves)
+    assert all(len(set(w)) == len(w) for w in waves)  # no dup in a wave
+    # exact drain: rounds * K completions dispatched, none discarded
+    assert sum(len(w) for w in waves) == 4 * 3
+    assert len(res["history"]) == 4
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting through the aggregation kernels
+# ---------------------------------------------------------------------------
+
+
+def test_fold_staleness_discounts_and_renormalizes():
+    w = jnp.asarray([0.5, 0.5])
+    s = jnp.asarray([0.0, 3.0])
+    out = np.asarray(fold_staleness(w, s, power=0.5))
+    np.testing.assert_allclose(out.sum(), 1.0, rtol=1e-6)
+    assert out[0] > out[1]
+    np.testing.assert_allclose(out[0] / out[1], 2.0, rtol=1e-5)  # sqrt(4)
+    # power=0 disables the discount
+    np.testing.assert_allclose(
+        np.asarray(fold_staleness(w, s, power=0.0)), [0.5, 0.5], rtol=1e-6)
+
+
+@pytest.mark.parametrize("n", [3, 20])
+def test_kernel_staleness_matches_folded_oracle(n):
+    key = jax.random.PRNGKey(n)
+    u = jax.random.normal(key, (n, 300))
+    w = jax.nn.softmax(jax.random.normal(key, (n,)))
+    s = jnp.arange(n, dtype=jnp.float32) % 4
+    out = fedavg_aggregate(u, w, staleness=s, staleness_power=0.5)
+    exp = ref.fedavg_ref(u, fold_staleness(w, s, 0.5))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_staleness_weighted_delta_kernel_matches_einsum():
+    from repro.core.aggregation import staleness_weighted_delta
+    rng = np.random.RandomState(0)
+    updates = [{"w": rng.randn(13, 7).astype(np.float32)} for _ in range(5)]
+    num = [3, 9, 1, 4, 6]
+    stal = [0.0, 1.0, 0.0, 2.0, 5.0]
+    a = staleness_weighted_delta(updates, num, stal, use_kernel=False)
+    b = staleness_weighted_delta(updates, num, stal, use_kernel=True)
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# FedBuffServer driven by the event loop
+# ---------------------------------------------------------------------------
+
+
+def test_async_drives_fedbuff_server_buffered_apply():
+    from repro.core.strategies.fedbuff import FedBuffServer
+    model = get_model("linear")
+    trainer = _make_trainer(model, {"execution": "async", "buffer_size": 3,
+                                    "max_concurrency": 6},
+                            {"rounds": 3, "clients_per_round": 6},
+                            ratios=(1.0, 3.0), server_cls=FedBuffServer)
+    before = jax.tree_util.tree_map(np.array, trainer.server.params)
+    res = trainer.run()
+    assert len(res["history"]) == 3
+    moved = any(
+        not np.allclose(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(before),
+                        jax.tree_util.tree_leaves(trainer.server.params)))
+    assert moved
+    # the engine owns the buffer; the server's own never accumulates
+    assert trainer.server._buffer == []
+
+
+def test_fedbuff_buffer_size_knob_overrides_class_default():
+    from repro.core.strategies.fedbuff import FedBuffServer
+    cfg = Config.make({"model": "linear",
+                       "data": {"dataset": "synthetic", "num_clients": 4},
+                       "resources": {"buffer_size": 7}})
+    model = get_model("linear")
+    fed = build_federated_data(cfg.data)
+    assert FedBuffServer(model, cfg, fed.test).buffer_size == 7
+
+
+# ---------------------------------------------------------------------------
+# tracking: per-client dispatch/finish timestamps
+# ---------------------------------------------------------------------------
+
+
+def test_async_tracks_dispatch_and_finish_timestamps():
+    easyfl.reset()
+    easyfl.init({
+        "model": "linear", "dataset": "synthetic", "task_id": "async_t",
+        "data": {"num_clients": 8, "batch_size": 32},
+        "server": {"rounds": 2, "clients_per_round": 4},
+        "client": {"local_epochs": 1, "lr": 0.1},
+        "resources": {"execution": "async", "buffer_size": 4,
+                      "max_concurrency": 4},
+    })
+    easyfl.run()
+    task = easyfl.tracker().get_task("async_t")
+    assert sorted(task.rounds) == [0, 1]
+    for rnd in task.rounds.values():
+        assert rnd.metrics["virtual_time"] >= rnd.metrics["round_time"] > 0
+        for cm in rnd.clients.values():
+            m = cm.metrics
+            assert m["finish_time"] > m["dispatch_time"] >= 0.0
+            assert m["staleness"] >= 0.0
+            assert m["simulated_time"] == pytest.approx(
+                m["finish_time"] - m["dispatch_time"])
+    easyfl.reset()
+
+
+# ---------------------------------------------------------------------------
+# loud errors
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("resources,match", [
+    ({"execution": "async", "buffer_size": -1}, "buffer_size"),
+    ({"execution": "async", "max_concurrency": -2}, "max_concurrency"),
+    ({"execution": "async", "staleness_power": -0.5}, "staleness_power"),
+    ({"execution": "async", "distributed": "data"}, "batched"),
+    ({"execution": "asynch"}, "unknown execution"),
+])
+def test_async_config_validation(resources, match):
+    easyfl.reset()
+    easyfl.init({"model": "linear", "dataset": "synthetic",
+                 "resources": resources})
+    with pytest.raises(ValueError, match=match):
+        easyfl.run()
+    easyfl.reset()
+
+
+def test_async_refuses_custom_aggregation_silently_bypassed():
+    """The event loop never calls Server.aggregation: a server subclass
+    overriding it (without buffered_apply) or a non-fedavg aggregation
+    name must raise instead of being silently ignored."""
+    from repro.core.strategies import PowerOfChoiceServer
+    easyfl.reset()
+    easyfl.init({"model": "linear", "dataset": "synthetic",
+                 "resources": {"execution": "async"}})
+    easyfl.register_server(PowerOfChoiceServer)   # overrides aggregation
+    with pytest.raises(ValueError, match="buffered_apply"):
+        easyfl.run()
+    easyfl.reset()
+
+    easyfl.init({"model": "linear", "dataset": "synthetic",
+                 "server": {"aggregation": "fedavgg"},
+                 "resources": {"execution": "async"}})
+    with pytest.raises(KeyError, match="fedavgg"):   # typo stays loud
+        easyfl.run()
+    easyfl.reset()
+
+
+def test_run_round_refused_under_async():
+    model = get_model("linear")
+    trainer = _make_trainer(model, {"execution": "async"},
+                            {"rounds": 1, "clients_per_round": 2},
+                            num_clients=4)
+    with pytest.raises(ValueError, match="event loop"):
+        trainer.run_round(0)

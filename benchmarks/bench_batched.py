@@ -5,12 +5,19 @@ Measures, per cohort size N ∈ {10, 50, 100, 200}:
 * round wall time under ``resources.execution = "sequential"`` (one jitted
   step dispatched per client per batch) vs ``"batched"`` (the whole cohort
   as one vmapped+scanned program) — compile warm-up excluded;
+* the same pair with **heterogeneous per-client optimizer hyperparameters**
+  (momentum / weight decay / nesterov sampled per client via
+  ``system_heterogeneity.hyperparam_choices``) at N ∈ {50, 200} — proving
+  the batched speedup survives optimizer heterogeneity — plus the number
+  of cohort-program retraces in the timed round (must be 0: hyperparams
+  are traced (N,) vectors, not baked-in constants);
 * FedAvg aggregation: jnp einsum oracle time and the chunked Pallas kernel's
   peak VMEM block (TILE_N·TILE_D·4B, constant) vs the old full-stack block
   (N·TILE_D·4B, linear in N).
 
 ``collect()`` returns the numbers as a dict for ``benchmarks/run.py
---json`` regression mode (checked by ``scripts/check_bench.py``).
+--json`` regression mode (checked by ``scripts/check_bench.py``; the
+hetero pair is gated exactly like the uniform one).
 """
 from __future__ import annotations
 
@@ -23,9 +30,14 @@ import numpy as np
 from benchmarks.common import emit
 
 NS = (10, 50, 100, 200)
+HETERO_NS = (50, 200)
+
+HETERO_CHOICES = {"momentum": (0.0, 0.5, 0.9),
+                  "weight_decay": (0.0, 1e-4),
+                  "nesterov": (False, True)}
 
 
-def _make_trainer(execution: str, n: int):
+def _make_trainer(execution: str, n: int, hetero: bool = False):
     from repro.core.config import Config
     from repro.core.rounds import Trainer
     from repro.core.server import Server
@@ -37,6 +49,8 @@ def _make_trainer(execution: str, n: int):
         "data": {"dataset": "synthetic", "num_clients": n, "batch_size": 32},
         "server": {"rounds": 2, "clients_per_round": n, "test_every": 0},
         "client": {"local_epochs": 2, "lr": 0.1},
+        "system_heterogeneity": (
+            {"hyperparam_choices": HETERO_CHOICES} if hetero else {}),
         "resources": {"execution": execution},
         "tracking": {"enabled": False},
     })
@@ -47,12 +61,27 @@ def _make_trainer(execution: str, n: int):
     return trainer
 
 
-def _round_time(execution: str, n: int) -> float:
-    trainer = _make_trainer(execution, n)
+def _round_time(execution: str, n: int, hetero: bool = False) -> float:
+    trainer = _make_trainer(execution, n, hetero=hetero)
     trainer.run_round(0)                      # warm-up (compile)
     t0 = time.perf_counter()
     trainer.run_round(1)
     return time.perf_counter() - t0
+
+
+def _hetero_times(n: int) -> Dict[str, float]:
+    """Hetero sequential/batched round times + timed-round retrace count."""
+    from repro.core.batched import cohort_trace_count
+
+    seq = _round_time("sequential", n, hetero=True)
+    trainer = _make_trainer("batched", n, hetero=True)
+    trainer.run_round(0)                      # warm-up (compile)
+    traces0 = cohort_trace_count()
+    t0 = time.perf_counter()
+    trainer.run_round(1)
+    bat = time.perf_counter() - t0
+    return {"sequential": seq, "batched": bat,
+            "retraces_timed_round": cohort_trace_count() - traces0}
 
 
 def _aggregation_times(n: int, d: int = 50_000) -> Dict[str, float]:
@@ -67,9 +96,12 @@ def _aggregation_times(n: int, d: int = 50_000) -> Dict[str, float]:
     return {"agg_einsum_s": time.perf_counter() - t0}
 
 
-def collect(ns: Iterable[int] = NS) -> Dict[str, Dict]:
+def collect(ns: Iterable[int] = NS,
+            hetero_ns: Iterable[int] = HETERO_NS) -> Dict[str, Dict]:
     from repro.kernels.fedavg_agg import TILE_D, TILE_N, bucket_clients
-    out: Dict[str, Dict] = {"sequential": {}, "batched": {}, "aggregation": {}}
+    out: Dict[str, Dict] = {"sequential": {}, "batched": {},
+                            "hetero_sequential": {}, "hetero_batched": {},
+                            "hetero_retraces": {}, "aggregation": {}}
     for n in ns:
         seq = _round_time("sequential", n)
         bat = _round_time("batched", n)
@@ -79,6 +111,11 @@ def collect(ns: Iterable[int] = NS) -> Dict[str, Dict]:
         agg["kernel_peak_block_bytes"] = TILE_N * TILE_D * 4
         agg["full_stack_block_bytes"] = bucket_clients(n) * TILE_D * 4
         out["aggregation"][str(n)] = agg
+    for n in hetero_ns:
+        het = _hetero_times(n)
+        out["hetero_sequential"][str(n)] = het["sequential"]
+        out["hetero_batched"][str(n)] = het["batched"]
+        out["hetero_retraces"][str(n)] = het["retraces_timed_round"]
     return out
 
 
@@ -96,6 +133,15 @@ def main() -> None:
         rows.append((f"agg_kernel_peak_block_bytes_N{n}",
                      agg["kernel_peak_block_bytes"],
                      f"vs {agg['full_stack_block_bytes']} full-stack"))
+    for n in sorted(data["hetero_sequential"], key=int):
+        seq = data["hetero_sequential"][n]
+        bat = data["hetero_batched"][n]
+        rows.append((f"hetero_roundtime_sequential_s_N{n}", seq, ""))
+        rows.append((f"hetero_roundtime_batched_s_N{n}", bat,
+                     f"{seq / bat:.1f}x faster (per-client momentum/wd/"
+                     f"nesterov)"))
+        rows.append((f"hetero_retraces_timed_round_N{n}",
+                     data["hetero_retraces"][n], "must be 0"))
     emit(rows)
 
 

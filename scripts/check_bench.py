@@ -93,19 +93,30 @@ def check_tests(update: bool = False) -> int:
 
 def check(data: dict) -> int:
     failures = 0
-    for n in sorted(data.get("sequential", {}), key=int):
-        seq = data["sequential"][n]
-        bat = data["batched"].get(n)
-        if bat is None:
-            print(f"N={n}: missing batched number")
-            failures += 1
-            continue
-        speedup = seq / bat if bat else float("inf")
-        gated = int(n) >= GATE_MIN_N
-        status = "ok" if bat < seq else ("FAIL" if gated else "warn")
-        print(f"N={n}: sequential={seq:.4f}s batched={bat:.4f}s "
-              f"({speedup:.1f}x) [{status}]")
-        if gated and bat >= seq:
+    for label, seq_key, bat_key in (
+            ("", "sequential", "batched"),
+            ("hetero ", "hetero_sequential", "hetero_batched")):
+        for n in sorted(data.get(seq_key, {}), key=int):
+            seq = data[seq_key][n]
+            bat = data.get(bat_key, {}).get(n)
+            if bat is None:
+                print(f"{label}N={n}: missing batched number")
+                failures += 1
+                continue
+            speedup = seq / bat if bat else float("inf")
+            gated = int(n) >= GATE_MIN_N
+            status = "ok" if bat < seq else ("FAIL" if gated else "warn")
+            print(f"{label}N={n}: sequential={seq:.4f}s batched={bat:.4f}s "
+                  f"({speedup:.1f}x) [{status}]")
+            if gated and bat >= seq:
+                failures += 1
+    # heterogeneous cohorts must not retrace the program round-over-round
+    for n, retraces in sorted(data.get("hetero_retraces", {}).items(),
+                              key=lambda kv: int(kv[0])):
+        status = "ok" if retraces == 0 else "FAIL"
+        print(f"hetero N={n}: {retraces} retrace(s) in timed round "
+              f"[{status}]")
+        if retraces != 0:
             failures += 1
     return failures
 

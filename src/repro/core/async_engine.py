@@ -31,7 +31,12 @@ or the initial ``max_concurrency`` cohort) runs through
 sizes are bucketed to powers of two inside the executor, so the many
 size-1 replacement waves of a heterogeneous run all hit a single compiled
 program, and the degenerate uniform-speed case (every finish time ties)
-keeps dispatching full-width waves — one program either way.
+keeps dispatching full-width waves — one program either way.  Per-client
+optimizer heterogeneity (momentum / weight decay / nesterov / AdamW
+betas — e.g. sampled via ``system_heterogeneity.hyperparam_choices``)
+rides along unchanged: the micro-cohort program consumes the same traced
+``CohortVectors`` hyperparameter vectors as synchronous batched rounds,
+so heterogeneous cohorts neither retrace nor fall back to sequential.
 
 Degenerate-case semantics: with ``K == max_concurrency == cohort size``
 and uniform client speeds, every wave completes at one virtual instant,

@@ -19,13 +19,21 @@ Shape discipline (no per-round recompiles):
   results are bit-equivalent to running each client alone.
 
 Per-client FedProx (``proximal_mu``), gradient clipping
-(``max_grad_norm``) and learning rates (``lr_scale``, relative to the
-shared optimizer's lr — exact because both optimizer families apply lr as
-a final linear factor) ride along as traced (N,) vectors, so ``FedAvg``,
-``FedProx`` and ``STC`` strategies all share one program (STC only changes
-the post-train compression stage, which stays on the per-client Python
-path).  The stacked initial params are donated to the program — XLA reuses
-the cohort-sized buffer for the evolving local params.
+(``max_grad_norm``) and the full optimizer hyperparameter set ride along
+as traced (N,) vectors gathered into one :class:`CohortVectors` struct:
+SGD cohorts vectorize lr / momentum / weight_decay / nesterov, AdamW
+cohorts lr / b1 / b2 / eps / weight_decay
+(``repro.optim.sgd_traced`` / ``adamw_traced`` — hyperparams are traced
+scalars threaded through ``update`` instead of Python closure constants).
+Opt-state is already vmapped per client, so per-client scalars broadcast
+exactly; a heterogeneous cohort matches per-client sequential execution
+(bit-for-bit for SGD, ulp-level for AdamW's ``1-beta`` arithmetic).  Only
+mixed optimizer *families* (sgd vs adamw) cannot share one program and
+raise loudly, naming the offending clients.  ``FedAvg``, ``FedProx`` and
+``STC`` strategies all share one program (STC only changes the post-train
+compression stage, which stays on the per-client Python path).  The
+stacked initial params are donated to the program — XLA reuses the
+cohort-sized buffer for the evolving local params.
 
 The virtual clock changes meaning here: wall time is shared by the whole
 cohort, so per-client base times are derived from each client's step count
@@ -65,13 +73,57 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from typing import NamedTuple
+
 from repro.core.local_train import cyclic_batches
 from repro.models.small import FLModel
-from repro.optim import Optimizer, apply_updates, global_norm
+from repro.optim import (
+    Optimizer, TracedOptimizer, adamw_traced, apply_updates, global_norm,
+    hparams_from_config, sgd_traced,
+)
 
 PyTree = Any
 
 CLIENT_AXIS = "clients"
+
+
+class CohortVectors(NamedTuple):
+    """All per-client (N_bucket,) vectors of the cohort program, in one
+    struct: the FedProx proximal coefficient, the grad-clip threshold, and
+    the optimizer hyperparameter struct (``SGDHParams`` / ``AdamWHParams``
+    of (N_bucket,) vectors — or ``()`` when the cohort shares one
+    hand-built uniform :class:`Optimizer` instance).
+
+    This is the single vector path into the jitted program — strategies
+    that need a new per-client scalar (FedProx's ``mu`` did, per-client
+    optimizer hyperparams do now) extend this struct instead of growing
+    the program signature ad hoc."""
+
+    mu: Any
+    max_norm: Any
+    hp: Any
+
+
+_trace_count = 0
+
+
+def cohort_trace_count() -> int:
+    """How many times a cohort program has been (re)traced this process.
+
+    The program body executes exactly once per jit trace (= compile), so
+    tests and benchmarks assert zero round-over-round recompiles at fixed
+    bucket shapes by checking this counter stays flat across rounds."""
+    return _trace_count
+
+
+@lru_cache(maxsize=32)
+def _wrap_uniform(optimizer: Optimizer) -> TracedOptimizer:
+    """Adapt a hand-built, cohort-uniform closure :class:`Optimizer` to the
+    traced interface (hyperparam struct ignored — it is ``()``)."""
+    return TracedOptimizer(
+        init=lambda p, hp: optimizer.init(p),
+        update=lambda g, s, p, hp: optimizer.update(g, s, p),
+        name=f"uniform({optimizer.name})")
 
 
 def bucket_pow2(n: int, floor: int = 1) -> int:
@@ -111,21 +163,25 @@ def build_client_mesh(devices: Optional[Sequence] = None):
 
 
 @lru_cache(maxsize=32)
-def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
-                        use_prox: bool, use_clip: bool, mesh=None):
+def make_cohort_program(model: FLModel, optimizer: TracedOptimizer,
+                        steps: int, use_prox: bool, use_clip: bool,
+                        mesh=None):
     """One jitted program running ``steps`` local steps for a whole cohort.
 
     Signature of the returned function (leading dim N_bucket everywhere
     except ``global_params``):
 
-        (params, x, y, idx, n_steps, mu, max_norm, lr_scale, global_params)
+        (params, x, y, idx, n_steps, vec, global_params)
             -> (updates, loss_mean, acc_mean)
 
-    ``lr_scale`` is the per-client learning-rate multiplier relative to the
-    shared ``optimizer``'s baked-in lr (1.0 = uniform cohort).  Both
-    optimizers here (SGD incl. momentum/nesterov/weight-decay, AdamW) apply
-    lr as a final linear factor of the step, so scaling the returned update
-    is exactly equivalent to building the optimizer with ``lr * scale``.
+    ``vec`` is a :class:`CohortVectors`: the per-client FedProx ``mu``,
+    grad-clip ``max_norm`` and the optimizer hyperparameter struct, each
+    leaf an (N_bucket,) vector vmapped down to a per-client scalar.
+    ``optimizer`` is a :class:`repro.optim.TracedOptimizer` whose
+    ``init``/``update`` consume ``vec.hp`` — per-client opt-state is
+    already vmapped, so per-client hyperparameter scalars broadcast
+    exactly and heterogeneous momentum / weight decay / nesterov / betas
+    need no special casing.
 
     ``params`` (the stacked copies of the global model) is donated.
     With ``mesh`` (1-D, axis "clients"), every leading-client-dim argument
@@ -134,9 +190,10 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
     devices; N_bucket must be a multiple of the mesh size.
     """
 
-    def one_client(params, x, y, idx, n_steps, mu, max_norm, lr_scale,
-                   global_params):
-        opt_state = optimizer.init(params)
+    def one_client(params, x, y, idx, n_steps, vec, global_params):
+        global _trace_count
+        _trace_count += 1            # executes once per jit trace/compile
+        opt_state = optimizer.init(params, vec.hp)
 
         def body(carry, xs):
             params, opt_state, loss_sum, acc_sum = carry
@@ -151,7 +208,7 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
                                            - g.astype(jnp.float32)))
                         for a, g in zip(jax.tree_util.tree_leaves(p),
                                         jax.tree_util.tree_leaves(global_params)))
-                    loss = loss + 0.5 * mu * prox
+                    loss = loss + 0.5 * vec.mu * prox
                 return loss, metrics
 
             (loss, metrics), grads = jax.value_and_grad(
@@ -159,11 +216,11 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
             if use_clip:
                 norm = global_norm(grads)
                 scale = jnp.where(
-                    max_norm > 0.0,
-                    jnp.minimum(1.0, max_norm / (norm + 1e-9)), 1.0)
+                    vec.max_norm > 0.0,
+                    jnp.minimum(1.0, vec.max_norm / (norm + 1e-9)), 1.0)
                 grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
-            updates, new_opt = optimizer.update(grads, opt_state, params)
-            updates = jax.tree_util.tree_map(lambda u: u * lr_scale, updates)
+            updates, new_opt = optimizer.update(grads, opt_state, params,
+                                                vec.hp)
             new_params = apply_updates(params, updates)
 
             active = step < n_steps          # padded steps leave state frozen
@@ -187,7 +244,7 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
         return update, loss_sum / denom, acc_sum / denom
 
     batched = jax.vmap(one_client,
-                       in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None))
+                       in_axes=(0, 0, 0, 0, 0, 0, None))
     if mesh is None:
         return jax.jit(batched, donate_argnums=(0,))
     from jax.sharding import NamedSharding, PartitionSpec as P
@@ -195,7 +252,7 @@ def make_cohort_program(model: FLModel, optimizer: Optimizer, steps: int,
     cl = NamedSharding(mesh, P(CLIENT_AXIS))   # shard the leading client dim
     rep = NamedSharding(mesh, P())             # replicate
     return jax.jit(batched,
-                   in_shardings=(cl, cl, cl, cl, cl, cl, cl, cl, rep),
+                   in_shardings=(cl, cl, cl, cl, cl, cl, rep),
                    out_shardings=(cl, cl, cl),
                    donate_argnums=(0,))
 
@@ -234,39 +291,99 @@ class BatchedExecutor:
     # ------------------------------------------------------------------
     @staticmethod
     def _cohort_optimizer(clients: Sequence):
-        """Resolve the cohort's shared optimizer + per-client lr ratios.
+        """Resolve the cohort's traced optimizer + per-client hp rows.
 
-        Instance identity is the fast path: ``get_optimizer()`` lru-caches,
-        so clients with identical hyperparameters share one Optimizer
-        object.  Distinct instances are allowed iff they come from the
-        client configs (no hand-swapped ``self.optimizer``) and differ
-        ONLY in learning rate: both optimizer families here apply lr as a
-        final linear factor of the step, so the cohort program runs one
-        shared optimizer (the first client's) and scales each client's
-        update by ``lr_i / lr_0`` — exact, not an approximation.  Anything
-        else (mixed family/momentum/weight-decay, custom optimizer objects)
-        cannot share one program and raises."""
+        Every per-client optimizer hyperparameter within one family is
+        vectorized: client configs are turned into per-client hyperparam
+        structs (``SGDHParams`` / ``AdamWHParams``) consumed by the traced
+        optimizer, so heterogeneous lr / momentum / weight decay /
+        nesterov (SGD) and lr / betas / eps / weight decay (AdamW) all
+        share ONE jitted program.  Static gates (``use_momentum`` /
+        ``use_nesterov``) prune dead state when the whole cohort sits on
+        the trivial value, so an lr-only or fully uniform cohort compiles
+        the same lean program as before.
+
+        Two cases cannot be vectorized and raise ``ValueError`` naming the
+        offending clients: mixed optimizer *families* (sgd vs adamw —
+        different update rules and opt-state shapes), and per-client
+        hand-assigned optimizer objects that don't match the client
+        configs (a cohort-wide *uniform* hand-built instance is still
+        honored via a traced wrapper).
+        """
         from repro.optim import get_optimizer
 
-        if len({id(c.optimizer) for c in clients}) == 1:
-            return clients[0].optimizer, None
+        # Name equality, not object identity: the name encodes every
+        # hyperparameter, so it identifies a config-derived optimizer even
+        # after get_optimizer's lru cache evicts the original instance
+        # (cohorts with >128 distinct hyperparam combos), and a hand-built
+        # optimizer that *matches* its config is behaviorally from-config.
         from_cfg = all(
-            c.optimizer is get_optimizer(c.cfg.optimizer, c.cfg.lr,
-                                         c.cfg.momentum, c.cfg.weight_decay)
+            c.optimizer.name == get_optimizer(
+                c.cfg.optimizer, c.cfg.lr, c.cfg.momentum,
+                c.cfg.weight_decay, c.cfg.nesterov, c.cfg.adam_b1,
+                c.cfg.adam_b2, c.cfg.adam_eps).name
             for c in clients)
-        families = {(c.cfg.optimizer, c.cfg.momentum, c.cfg.weight_decay)
-                    for c in clients}
-        lr0 = clients[0].cfg.lr
-        if not from_cfg or len(families) != 1 or lr0 <= 0 or \
-                any(c.cfg.lr < 0 for c in clients):
+        if not from_cfg:
+            if len({id(c.optimizer) for c in clients}) == 1:
+                return _wrap_uniform(clients[0].optimizer), [()] * len(clients)
             raise ValueError(
-                "batched execution needs one shared optimizer across the "
-                "cohort (per-client learning rates are the only vectorized "
-                "hyperparameter), got "
-                f"{sorted({c.optimizer.name for c in clients})}; "
-                "use resources.execution='sequential'")
-        ratios = np.asarray([c.cfg.lr / lr0 for c in clients], np.float32)
-        return clients[0].optimizer, ratios
+                "batched execution cannot vectorize hand-assigned "
+                "per-client optimizer objects "
+                f"({sorted({c.optimizer.name for c in clients})}); keep "
+                "optimizers in the client configs or use "
+                "resources.execution='sequential'")
+        families: Dict[str, List[str]] = {}
+        rows = []
+        for c in clients:
+            family, hp = hparams_from_config(c.cfg)
+            families.setdefault(family, []).append(c.client_id)
+            rows.append(hp)
+        if len(families) > 1:
+            detail = "; ".join(f"{fam}: {ids}"
+                               for fam, ids in sorted(families.items()))
+            raise ValueError(
+                "batched execution cannot mix optimizer families in one "
+                "cohort (per-client hyperparameters within one family are "
+                f"vectorized) — got {detail}; use "
+                "resources.execution='sequential' or partition the "
+                "federation by family")
+        if "sgd" in families:
+            opt = sgd_traced(
+                use_momentum=any(r.momentum != 0.0 for r in rows),
+                use_nesterov=any(r.nesterov for r in rows))
+        else:
+            opt = adamw_traced()
+        return opt, rows
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def cohort_vectors(clients: Sequence, n_bucket: int):
+        """Build the cohort's :class:`CohortVectors` + traced optimizer.
+
+        The one shared (N_bucket,) vector builder: FedProx ``mu``,
+        grad-clip ``max_norm`` and the optimizer hyperparam struct are
+        stacked from the client configs in one place, with padded rows
+        filled with inert values (padded clients run 0 active steps; mu
+        and max_norm pad to 0, hyperparams pad to the first client's row
+        so the traced ops stay NaN-free)."""
+        opt, rows = BatchedExecutor._cohort_optimizer(clients)
+        n = len(clients)
+
+        def stack(values, pad):
+            a = np.full((n_bucket,), pad, np.float32)
+            a[:n] = values
+            return a
+
+        mu = stack([c.cfg.proximal_mu for c in clients], 0.0)
+        max_norm = stack([c.cfg.max_grad_norm for c in clients], 0.0)
+        if rows[0] == ():            # cohort-uniform hand-built optimizer
+            hp = ()
+        else:
+            hp_cls = type(rows[0])
+            hp = hp_cls(*(stack([getattr(r, f) for r in rows],
+                                getattr(rows[0], f))
+                          for f in hp_cls._fields))
+        return CohortVectors(mu=mu, max_norm=max_norm, hp=hp), opt
 
     # ------------------------------------------------------------------
     def run_cohort_stacked(self, clients: Sequence, global_params: PyTree,
@@ -286,12 +403,12 @@ class BatchedExecutor:
                 f"batched execution needs a uniform batch size, got "
                 f"{sorted(batch_sizes)}")
         B = batch_sizes.pop()
-        optimizer, lr_ratios = self._cohort_optimizer(clients)
 
         N = len(clients)
         Nb = bucket_pow2(N)
         if self.mesh is not None:
             Nb = max(Nb, self.mesh.size)   # equal shards: mesh size divides Nb
+        vec, optimizer = self.cohort_vectors(clients, Nb)
         idx_list = [self._batch_indices(c, round_id) for c in clients]
         S = bucket_pow2(max(len(ix) for ix in idx_list))
         maxn = bucket_pow2(max(len(c.data) for c in clients))
@@ -302,24 +419,17 @@ class BatchedExecutor:
         y = np.zeros((Nb, maxn) + y0.shape[1:], dtype=y0.dtype)
         idx = np.zeros((Nb, S, B), dtype=np.int32)
         n_steps = np.zeros((Nb,), dtype=np.int32)
-        mu = np.zeros((Nb,), dtype=np.float32)
-        max_norm = np.zeros((Nb,), dtype=np.float32)
-        lr_scale = np.ones((Nb,), dtype=np.float32)  # padded clients inert
-        if lr_ratios is not None:
-            lr_scale[: len(clients)] = lr_ratios
         for i, c in enumerate(clients):
             n = len(c.data)
             x[i, :n] = c.data.x
             y[i, :n] = c.data.y
             idx[i, : len(idx_list[i])] = idx_list[i]
             n_steps[i] = len(idx_list[i])
-            mu[i] = c.cfg.proximal_mu
-            max_norm[i] = c.cfg.max_grad_norm
 
         program = make_cohort_program(
             self.model, optimizer, S,
-            use_prox=bool((mu > 0).any()),
-            use_clip=bool((max_norm > 0).any()),
+            use_prox=bool((vec.mu > 0).any()),
+            use_clip=bool((vec.max_norm > 0).any()),
             mesh=self.mesh)
 
         stacked = jax.tree_util.tree_map(
@@ -336,8 +446,8 @@ class BatchedExecutor:
             warnings.filterwarnings("ignore", message=".*donated.*")
             updates, loss, acc = program(
                 stacked, jnp.asarray(x), jnp.asarray(y), jnp.asarray(idx),
-                jnp.asarray(n_steps), jnp.asarray(mu), jnp.asarray(max_norm),
-                jnp.asarray(lr_scale), global_params)
+                jnp.asarray(n_steps),
+                jax.tree_util.tree_map(jnp.asarray, vec), global_params)
         jax.block_until_ready(updates)
         wall = time.perf_counter() - t0
 
@@ -358,8 +468,10 @@ class BatchedExecutor:
 
         Args:
             clients: cohort of :class:`repro.core.client.Client`s (uniform
-                batch size and optimizer family; per-client lr/mu/clip are
-                vectorized — anything else raises ``ValueError``).
+                batch size and optimizer *family*; every per-client
+                optimizer hyperparameter, FedProx mu and grad-clip norm
+                are vectorized — mixed families raise ``ValueError``
+                naming the clients).
             global_params: the global model pytree every client starts
                 from.
             round_id: seeds each client's epoch/batch shuffle exactly like

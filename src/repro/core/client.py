@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as comp
-from repro.core.config import ClientConfig
+from repro.core.config import ClientConfig, validate_optimizer_hparams
 from repro.core.local_train import evaluate, local_train
 from repro.data.fed_data import ClientData
 from repro.models.small import FLModel
@@ -34,8 +34,10 @@ class Client:
         self.data = data
         self.cfg = cfg
         self.batch_size = batch_size
+        validate_optimizer_hparams(cfg, owner=f"client {str(client_id)!r}")
         self.optimizer = get_optimizer(cfg.optimizer, cfg.lr, cfg.momentum,
-                                       cfg.weight_decay)
+                                       cfg.weight_decay, cfg.nesterov,
+                                       cfg.adam_b1, cfg.adam_b2, cfg.adam_eps)
         self._residual = None      # error-feedback state for compression
 
     # ------------------------------------------------------------------

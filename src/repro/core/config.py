@@ -132,12 +132,104 @@ class ClientConfig:
     lr: float = 0.01
     momentum: float = 0.9             # paper: SGD momentum 0.9
     weight_decay: float = 0.0
+    nesterov: bool = False            # SGD nesterov momentum
+    adam_b1: float = 0.9              # AdamW beta1
+    adam_b2: float = 0.999            # AdamW beta2
+    adam_eps: float = 1e-8            # AdamW epsilon
     # client->server update compression: "none" | "stc" | "int8"
     compression: str = "none"
     stc_sparsity: float = 0.01        # keep fraction for STC top-k
     # FedProx proximal term (0 disables; strategy plugin can override train)
     proximal_mu: float = 0.0
     max_grad_norm: float = 0.0        # 0 = no clipping
+
+
+# Per-client-sampleable hyperparameters (``system_heterogeneity.
+# hyperparam_choices``): ClientConfig field -> (validator, description).
+# Every entry is vectorized by the batched/async cohort program, so sampling
+# them per client never forces the sequential path.
+def _finite(v) -> bool:
+    try:
+        import math
+        return math.isfinite(float(v))
+    except (TypeError, ValueError):
+        return False
+
+
+_HPARAM_VALIDATORS = {
+    "lr": (lambda v: _finite(v) and float(v) > 0, "a finite float > 0"),
+    "momentum": (lambda v: _finite(v) and 0 <= float(v) < 1,
+                 "a finite float in [0, 1)"),
+    "weight_decay": (lambda v: _finite(v) and float(v) >= 0,
+                     "a finite float >= 0"),
+    "nesterov": (lambda v: isinstance(v, (bool, int)) and v in (0, 1, False, True),
+                 "a bool"),
+    "adam_b1": (lambda v: _finite(v) and 0 <= float(v) < 1,
+                "a finite float in [0, 1)"),
+    "adam_b2": (lambda v: _finite(v) and 0 <= float(v) < 1,
+                "a finite float in [0, 1)"),
+    "adam_eps": (lambda v: _finite(v) and float(v) > 0,
+                 "a finite float > 0"),
+    "proximal_mu": (lambda v: _finite(v) and float(v) >= 0,
+                    "a finite float >= 0"),
+    "max_grad_norm": (lambda v: _finite(v) and float(v) >= 0,
+                      "a finite float >= 0"),
+}
+
+SAMPLEABLE_HPARAMS = tuple(_HPARAM_VALIDATORS)
+
+
+def validate_optimizer_hparams(cfg: "ClientConfig", owner: str = "client"
+                               ) -> None:
+    """Reject negative/NaN/out-of-range optimizer hyperparameters loudly.
+
+    Called at ``Client`` construction (every execution engine) so a bad
+    per-client value — hand-built config or sampled via
+    ``system_heterogeneity.hyperparam_choices`` — fails with the offending
+    client named instead of producing NaN params mid-round.
+    """
+    for name, (ok, expected) in _HPARAM_VALIDATORS.items():
+        value = getattr(cfg, name)
+        if not ok(value):
+            raise ValueError(
+                f"{owner}: ClientConfig.{name}={value!r} is invalid; "
+                f"expected {expected}")
+
+
+def validate_hyperparam_choices(choices) -> None:
+    """Validate ``system_heterogeneity.hyperparam_choices`` eagerly.
+
+    ``choices`` maps a sampleable ``ClientConfig`` field to a non-empty
+    sequence of candidate values (sampled uniformly per client).  Unknown
+    fields — including ``optimizer``, because mixed optimizer *families*
+    cannot share one cohort program — and invalid values raise
+    ``ValueError`` at init time, not mid-training.
+    """
+    if not choices:
+        return
+    if not isinstance(choices, Mapping):
+        raise ValueError(
+            f"system_heterogeneity.hyperparam_choices must be a mapping of "
+            f"ClientConfig field -> sequence of choices, got {choices!r}")
+    for name, values in choices.items():
+        if name not in _HPARAM_VALIDATORS:
+            raise ValueError(
+                f"system_heterogeneity.hyperparam_choices: {name!r} is not "
+                f"per-client sampleable; allowed: {sorted(SAMPLEABLE_HPARAMS)}"
+                + (" (mixed optimizer families cannot share one cohort "
+                   "program — partition the federation instead)"
+                   if name == "optimizer" else ""))
+        if isinstance(values, (str, bytes)) or not isinstance(
+                values, Sequence) or len(values) == 0:
+            raise ValueError(
+                f"system_heterogeneity.hyperparam_choices[{name!r}] must be "
+                f"a non-empty sequence of values, got {values!r}")
+        ok, expected = _HPARAM_VALIDATORS[name]
+        bad = [v for v in values if not ok(v)]
+        if bad:
+            raise ValueError(
+                f"system_heterogeneity.hyperparam_choices[{name!r}] has "
+                f"invalid value(s) {bad!r}; expected {expected}")
 
 
 @dataclass(frozen=True)
@@ -151,6 +243,13 @@ class SystemHeterogeneityConfig:
     # Optional per-message network latency (seconds) added by the transport.
     network_latency: float = 0.0
     seed: int = 0
+    # Per-client optimizer-hyperparameter sampling (optimizer
+    # heterogeneity, FLGo-style): maps a ClientConfig field (see
+    # SAMPLEABLE_HPARAMS) to a sequence of choices drawn uniformly per
+    # client, e.g. {"momentum": (0.0, 0.5, 0.9)}.  Independent of
+    # ``enabled`` (which gates the *speed* simulation); every sampleable
+    # field is vectorized by the batched/async cohort program.
+    hyperparam_choices: Optional[Mapping[str, Sequence]] = None
 
 
 @dataclass(frozen=True)

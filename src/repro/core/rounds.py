@@ -16,6 +16,7 @@ deployment would measure), so the scheduler optimizes against stragglers.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
 
@@ -88,9 +89,17 @@ class Trainer:
     # ------------------------------------------------------------------
     def client(self, cid: str) -> Client:
         if cid not in self.clients:
+            ccfg = self.cfg.client
+            overrides = self.het.hyperparam_overrides(cid)
+            if overrides:
+                # per-client optimizer heterogeneity, sampled
+                # deterministically from system_heterogeneity.
+                # hyperparam_choices — every sampled field is vectorized
+                # by the batched/async cohort program
+                ccfg = dataclasses.replace(ccfg, **overrides)
             self.clients[cid] = self.client_cls(
                 cid, self.model, self.fed_data.clients[cid],
-                self.cfg.client, batch_size=self.cfg.data.batch_size)
+                ccfg, batch_size=self.cfg.data.batch_size)
         return self.clients[cid]
 
     def _allocate(self, selected: List[str], round_id: int) -> List[List[str]]:

@@ -20,6 +20,15 @@ class FedProxClient(Client):
     The jitted local step already supports ``proximal_mu`` (it must live
     inside the compiled loss), so the override is pure configuration — the
     minimal possible single-stage change.
+
+    Because the mu lives in the client config, it composes with every
+    other per-client knob: the batched/async engines stack ``proximal_mu``
+    into the same :class:`repro.core.batched.CohortVectors` struct as the
+    per-client optimizer hyperparameters (one shared (N,) vector builder),
+    so a cohort can mix FedProx strengths AND momentum/weight-decay/
+    nesterov/beta values in one compiled program.  Per-client mu without a
+    custom client class: ``system_heterogeneity.hyperparam_choices =
+    {"proximal_mu": (0.0, 0.01, 0.1)}``.
     """
 
     def __init__(self, client_id, model, data, cfg, batch_size=64,

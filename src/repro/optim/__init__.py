@@ -1,4 +1,5 @@
 from repro.optim.optimizers import (  # noqa: F401
-    Optimizer, sgd, adamw, apply_updates, global_norm, clip_by_global_norm,
-    get_optimizer,
+    AdamWHParams, Optimizer, SGDHParams, TracedOptimizer, adamw,
+    adamw_traced, apply_updates, clip_by_global_norm, get_optimizer,
+    global_norm, hparams_from_config, normalize_family, sgd, sgd_traced,
 )

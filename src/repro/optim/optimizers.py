@@ -3,10 +3,20 @@
 An :class:`Optimizer` is an (init, update) pair over parameter pytrees.
 ``update`` maps (grads, state, params) -> (updates, state); apply with
 ``apply_updates``.  SGD with momentum 0.9 is the paper's default (§VIII-B).
+
+:class:`TracedOptimizer` is the *vectorizable* twin used by the batched
+cohort engine: hyperparameters are not closure constants but a per-client
+scalar struct (:class:`SGDHParams` / :class:`AdamWHParams`) threaded
+through ``init``/``update`` as traced values.  Stacked to (N,) vectors and
+``vmap``-ed over the client dimension, one compiled program serves a cohort
+whose clients carry *different* momentum / weight decay / nesterov /
+betas / eps — with the same arithmetic (and therefore, for SGD, bit-exact
+agreement) as running each client's closure optimizer alone.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -64,7 +74,9 @@ def sgd(lr: float, momentum: float = 0.0, weight_decay: float = 0.0,
             upd = jax.tree_util.tree_map(lambda m: -lr * m, new_m)
         return upd, new_m
 
-    return Optimizer(init, update, f"sgd(lr={lr},m={momentum})")
+    return Optimizer(
+        init, update,
+        f"sgd(lr={lr},m={momentum},wd={weight_decay},nesterov={nesterov})")
 
 
 class AdamState(NamedTuple):
@@ -99,17 +111,159 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
         return (jax.tree_util.tree_map(upd, mu, nu, params),
                 AdamState(mu, nu, count))
 
-    return Optimizer(init, update, f"adamw(lr={lr})")
+    return Optimizer(
+        init, update,
+        f"adamw(lr={lr},b1={b1},b2={b2},eps={eps},wd={weight_decay})")
 
 
-from functools import lru_cache
+# ---------------------------------------------------------------------------
+# Traced-hyperparameter variants (per-client vectorization)
+# ---------------------------------------------------------------------------
+
+
+class SGDHParams(NamedTuple):
+    """SGD hyperparameters as traced scalars (or (N,) vectors pre-vmap).
+
+    ``nesterov`` is a 0.0/1.0 float so a cohort can mix nesterov and plain
+    momentum clients inside one program (selected with ``jnp.where``)."""
+
+    lr: Any
+    momentum: Any
+    weight_decay: Any
+    nesterov: Any
+
+
+class AdamWHParams(NamedTuple):
+    lr: Any
+    b1: Any
+    b2: Any
+    eps: Any
+    weight_decay: Any
+
+
+@dataclass(frozen=True)
+class TracedOptimizer:
+    """(init, update) pair whose hyperparameters are traced arguments.
+
+    ``init(params, hp)`` and ``update(grads, state, params, hp)`` mirror
+    :class:`Optimizer` with a trailing hyperparameter struct; the struct's
+    leaves are scalars under ``vmap`` (stacked (N,) vectors outside), so the
+    same program body serves every client of a heterogeneous cohort.
+    """
+
+    init: Callable[[PyTree, Any], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Any], Tuple[PyTree, PyTree]]
+    name: str = "traced_optimizer"
+
+
+jax.tree_util.register_static(TracedOptimizer)
+
+
+@lru_cache(maxsize=16)   # shared instance => shared jit cache across rounds
+def sgd_traced(use_momentum: bool = True,
+               use_nesterov: bool = True) -> TracedOptimizer:
+    """SGD with per-client traced lr / momentum / weight_decay / nesterov.
+
+    The static gates prune dead state/ops when the whole cohort shares the
+    trivial value: ``use_momentum=False`` (every client has momentum 0)
+    drops the momentum buffer entirely — matching the closure ``sgd``'s
+    empty state — and ``use_nesterov=False`` skips the nesterov blend.
+    The arithmetic per step is the same op sequence as :func:`sgd`, so a
+    traced client agrees bit-for-bit with its closure twin.
+    """
+
+    def init(params, hp):
+        if not use_momentum:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, hp: SGDHParams):
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g + hp.weight_decay * p.astype(g.dtype),
+            grads, params)
+        if not use_momentum:
+            return jax.tree_util.tree_map(lambda g: -hp.lr * g, grads), state
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: hp.momentum * m + g, state, grads)
+        if use_nesterov:
+            upd = jax.tree_util.tree_map(
+                lambda m, g: -hp.lr * jnp.where(
+                    hp.nesterov > 0, hp.momentum * m + g, m),
+                new_m, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -hp.lr * m, new_m)
+        return upd, new_m
+
+    return TracedOptimizer(
+        init, update,
+        f"sgd_traced(momentum={use_momentum},nesterov={use_nesterov})")
+
+
+@lru_cache(maxsize=16)
+def adamw_traced() -> TracedOptimizer:
+    """AdamW with per-client traced lr / b1 / b2 / eps / weight_decay."""
+
+    def init(params, hp):
+        zeros = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+        return AdamState(zeros(), zeros(), jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, hp: AdamWHParams):
+        count = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: hp.b1 * m + (1 - hp.b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: hp.b2 * v + (1 - hp.b2) * jnp.square(g),
+            state.nu, grads)
+        cf = count.astype(jnp.float32)
+        bc1 = 1 - hp.b1 ** cf
+        bc2 = 1 - hp.b2 ** cf
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            step = mhat / (jnp.sqrt(vhat) + hp.eps)
+            step = step + hp.weight_decay * p.astype(step.dtype)
+            return -hp.lr * step
+
+        return (jax.tree_util.tree_map(upd, mu, nu, params),
+                AdamState(mu, nu, count))
+
+    return TracedOptimizer(init, update, "adamw_traced")
+
+
+def hparams_from_config(cfg) -> Tuple[str, NamedTuple]:
+    """(family, hyperparam struct of Python floats) for a ``ClientConfig``.
+
+    The returned struct rows are stacked into the (N,) cohort vectors by
+    ``repro.core.batched.cohort_vectors``; ``family`` is the normalized
+    optimizer family name ("sgd" | "adamw").
+    """
+    family = normalize_family(cfg.optimizer)
+    if family == "sgd":
+        return family, SGDHParams(
+            lr=float(cfg.lr), momentum=float(cfg.momentum),
+            weight_decay=float(cfg.weight_decay),
+            nesterov=1.0 if cfg.nesterov else 0.0)
+    return family, AdamWHParams(
+        lr=float(cfg.lr), b1=float(cfg.adam_b1), b2=float(cfg.adam_b2),
+        eps=float(cfg.adam_eps), weight_decay=float(cfg.weight_decay))
+
+
+def normalize_family(name: str) -> str:
+    if name == "sgd":
+        return "sgd"
+    if name in ("adam", "adamw"):
+        return "adamw"
+    raise ValueError(f"unknown optimizer {name!r}")
 
 
 @lru_cache(maxsize=128)  # shared instance => shared jit cache across clients
 def get_optimizer(name: str, lr: float, momentum: float = 0.9,
-                  weight_decay: float = 0.0) -> Optimizer:
-    if name == "sgd":
-        return sgd(lr, momentum=momentum, weight_decay=weight_decay)
-    if name in ("adam", "adamw"):
-        return adamw(lr, weight_decay=weight_decay)
-    raise ValueError(f"unknown optimizer {name!r}")
+                  weight_decay: float = 0.0, nesterov: bool = False,
+                  b1: float = 0.9, b2: float = 0.999,
+                  eps: float = 1e-8) -> Optimizer:
+    family = normalize_family(name)
+    if family == "sgd":
+        return sgd(lr, momentum=momentum, weight_decay=weight_decay,
+                   nesterov=nesterov)
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)

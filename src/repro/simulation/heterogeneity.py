@@ -10,21 +10,58 @@ The paper implements this with wall-clock sleeps before upload; on TPU we
 keep a **virtual clock** (sleeping an accelerator wastes it and is
 non-deterministic — DESIGN.md §2, assumption 2).  The virtual times feed the
 straggler analysis (Fig. 6) and GreedyAda scheduling identically.
+
+Besides device *speeds*, the simulator also samples per-client **optimizer
+hyperparameters** (``cfg.hyperparam_choices`` — FLGo-style optimizer
+heterogeneity): each listed ``ClientConfig`` field is drawn uniformly per
+client from its choice set, deterministically in the client id and
+``cfg.seed`` (an FNV-1a hash, not Python's process-randomized ``hash``), so
+a federation resamples identically across runs and processes.  The sampled
+overrides are applied by ``Trainer.client`` when a client is materialized;
+every sampleable field is vectorized by the batched/async cohort program,
+so heterogeneity never forces the sequential engine.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence
+from typing import Any, Dict, Optional, Sequence
 
 import numpy as np
 
-from repro.core.config import SystemHeterogeneityConfig
+from repro.core.config import (
+    SystemHeterogeneityConfig, validate_hyperparam_choices,
+)
+
+
+def _stable_hash(s: str) -> int:
+    """FNV-1a — deterministic across processes (unlike ``hash``)."""
+    h = 2166136261
+    for ch in s.encode():
+        h = (h ^ ch) * 16777619 % (2**31)
+    return h
 
 
 @dataclass
 class SystemHeterogeneity:
     cfg: SystemHeterogeneityConfig
     assignment: Dict[str, float] = field(default_factory=dict)
+
+    def __post_init__(self):
+        validate_hyperparam_choices(self.cfg.hyperparam_choices)
+
+    def hyperparam_overrides(self, client_id: str) -> Dict[str, Any]:
+        """Per-client ``ClientConfig`` overrides sampled from
+        ``cfg.hyperparam_choices`` (empty dict when the knob is unset).
+
+        Fields are sampled independently, each from its own choice set,
+        with native Python types preserved (``nesterov`` stays a bool)."""
+        choices = self.cfg.hyperparam_choices
+        if not choices:
+            return {}
+        rng = np.random.RandomState(
+            (_stable_hash(client_id) ^ (self.cfg.seed * 2654435761)) % (2**31))
+        return {name: choices[name][int(rng.randint(len(choices[name])))]
+                for name in sorted(choices)}
 
     def speed_ratio(self, client_id: str) -> float:
         if not self.cfg.enabled:

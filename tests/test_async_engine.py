@@ -95,6 +95,39 @@ def test_async_degenerate_matches_batched_sync():
     assert all(h["clients"] == 5 for h in ra["history"])
 
 
+def test_async_degenerate_matches_batched_sync_hetero_hyperparams():
+    """Per-client optimizer hyperparams (sampled via
+    system_heterogeneity.hyperparam_choices) round-trip through the async
+    micro-cohorts: the degenerate event loop must still match synchronous
+    batched rounds, now with a heterogeneous cohort program."""
+    def run(resources):
+        easyfl.reset()
+        easyfl.init({
+            "model": "linear", "dataset": "synthetic",
+            "data": {"num_clients": 12, "batch_size": 32},
+            "server": {"rounds": 3, "clients_per_round": 5},
+            "client": {"local_epochs": 2, "lr": 0.1},
+            "system_heterogeneity": {
+                "hyperparam_choices": {"momentum": (0.0, 0.5, 0.9),
+                                       "weight_decay": (0.0, 0.01),
+                                       "nesterov": (False, True)}},
+            "resources": resources,
+        })
+        res = easyfl.run()
+        easyfl.reset()
+        return res
+
+    rb = run({"execution": "batched"})
+    ra = run({"execution": "async", "buffer_size": 5, "max_concurrency": 5})
+    for a, b in zip(jax.tree_util.tree_leaves(rb["params"]),
+                    jax.tree_util.tree_leaves(ra["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        [h["train_loss"] for h in rb["history"]],
+        [h["train_loss"] for h in ra["history"]], rtol=1e-4)
+
+
 def test_async_default_knobs_resolve_to_cohort_size():
     model = get_model("linear")
     trainer = _make_trainer(model, {"execution": "async"},

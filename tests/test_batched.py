@@ -258,10 +258,131 @@ def test_batched_per_client_lr_matches_sequential():
                                    seq["metrics"]["loss"], rtol=1e-4)
 
 
-def test_batched_rejects_mixed_optimizer_family():
-    """lr is the only vectorizable optimizer hyperparameter; mixed
-    momentum (or family) must still raise loudly."""
-    import dataclasses
+def _hetero_clients(model, cfgs, n_samples=48, batch_size=16, seed=0):
+    from repro.core.client import Client
+    from repro.data.fed_data import ClientData
+
+    rng = np.random.RandomState(seed)
+    clients = []
+    for i, cfg in enumerate(cfgs):
+        data = ClientData(rng.randn(n_samples, 64).astype(np.float32),
+                          rng.randint(0, 10, n_samples).astype(np.int32))
+        clients.append(Client(f"c{i}", model, data, cfg,
+                              batch_size=batch_size))
+    return clients
+
+
+def _assert_batched_matches_per_client_sequential(clients, rounds=2):
+    from repro.core.batched import BatchedExecutor
+
+    model = clients[0].model
+    params = model.init(jax.random.PRNGKey(0))
+    ex = BatchedExecutor(model)
+    for r in range(rounds):
+        batched = ex.run_cohort(clients, params, round_id=r)
+        for c, res in zip(clients, batched):
+            seq = c.train(params, round_id=r)
+            for a, b in zip(jax.tree_util.tree_leaves(seq["update"]),
+                            jax.tree_util.tree_leaves(res["update"])):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(res["metrics"]["loss"],
+                                       seq["metrics"]["loss"], rtol=1e-4)
+
+
+def test_batched_per_client_sgd_hyperparams_match_sequential():
+    """Heterogeneous momentum / weight decay / nesterov (and lr) across one
+    SGD cohort: the traced-hyperparam cohort program must match per-client
+    sequential execution to tight tolerance."""
+    from repro.core.config import ClientConfig
+    from repro.models.small import linear_model
+
+    cfgs = [
+        ClientConfig(local_epochs=2, lr=0.1, momentum=0.9),
+        ClientConfig(local_epochs=2, lr=0.02, momentum=0.0),
+        ClientConfig(local_epochs=2, lr=0.3, momentum=0.5,
+                     weight_decay=0.01),
+        ClientConfig(local_epochs=2, lr=0.1, momentum=0.9, nesterov=True),
+        ClientConfig(local_epochs=2, lr=0.05, momentum=0.7,
+                     weight_decay=0.001, nesterov=True),
+    ]
+    model = linear_model()
+    _assert_batched_matches_per_client_sequential(
+        _hetero_clients(model, cfgs))
+
+
+def test_batched_per_client_adamw_hyperparams_match_sequential():
+    """Heterogeneous AdamW betas / eps / weight decay (and lr)."""
+    from repro.core.config import ClientConfig
+    from repro.models.small import linear_model
+
+    cfgs = [
+        ClientConfig(local_epochs=2, optimizer="adamw", lr=0.01),
+        ClientConfig(local_epochs=2, optimizer="adamw", lr=0.003,
+                     adam_b1=0.8, adam_b2=0.99),
+        ClientConfig(local_epochs=2, optimizer="adamw", lr=0.01,
+                     adam_eps=1e-6, weight_decay=0.01),
+        ClientConfig(local_epochs=2, optimizer="adamw", lr=0.02,
+                     adam_b1=0.95, weight_decay=0.001),
+    ]
+    model = linear_model()
+    _assert_batched_matches_per_client_sequential(
+        _hetero_clients(model, cfgs))
+
+
+def test_hetero_hyperparams_zero_recompiles_across_rounds():
+    """A heterogeneous cohort at fixed bucket shapes must compile exactly
+    once: per-client hyperparams are traced (N,) vectors, never baked-in
+    constants, so round-over-round values changes cannot retrace."""
+    from repro.core.batched import BatchedExecutor, cohort_trace_count
+    from repro.core.config import ClientConfig
+    from repro.models.small import linear_model
+
+    cfgs = [ClientConfig(local_epochs=2, lr=0.1 * (i + 1) / 5,
+                         momentum=(0.0, 0.5, 0.9)[i % 3],
+                         weight_decay=(0.0, 0.01)[i % 2],
+                         nesterov=bool(i % 2))
+            for i in range(5)]
+    model = linear_model()
+    clients = _hetero_clients(model, cfgs)
+    params = model.init(jax.random.PRNGKey(0))
+    ex = BatchedExecutor(model)
+    ex.run_cohort(clients, params, round_id=0)      # warm-up trace
+    before = cohort_trace_count()
+    for r in range(1, 4):
+        ex.run_cohort(clients, params, round_id=r)
+    assert cohort_trace_count() == before, (
+        "per-client hyperparam heterogeneity must not retrace the cohort "
+        "program at fixed bucket shapes")
+
+
+def test_batched_rejects_hand_assigned_per_client_optimizers():
+    """Distinct optimizer objects not derived from the client configs
+    cannot be vectorized (a cohort-uniform shared instance still can)."""
+    from repro.core.batched import BatchedExecutor
+    from repro.core.config import ClientConfig
+    from repro.models.small import linear_model
+    from repro.optim import sgd
+
+    model = linear_model()
+    clients = _hetero_clients(
+        model, [ClientConfig(local_epochs=1), ClientConfig(local_epochs=1)])
+    clients[0].optimizer = sgd(0.123)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="hand-assigned"):
+        BatchedExecutor(model).run_cohort(clients, params, 0)
+    # uniform hand-built instance: allowed via the traced wrapper
+    shared = sgd(0.05, momentum=0.9)
+    for c in clients:
+        c.optimizer = shared
+    res = BatchedExecutor(model).run_cohort(clients, params, 0)
+    assert len(res) == 2
+
+
+def test_batched_rejects_mixed_optimizer_family_naming_clients():
+    """Per-client hyperparameters within one family are vectorized; only
+    mixed optimizer *families* cannot share a program — the error must
+    name the offending clients."""
     from repro.core.batched import BatchedExecutor
     from repro.core.client import Client
     from repro.core.config import ClientConfig
@@ -272,11 +393,18 @@ def test_batched_rejects_mixed_optimizer_family():
     rng = np.random.RandomState(0)
     data = ClientData(rng.randn(32, 64).astype(np.float32),
                       rng.randint(0, 10, 32).astype(np.int32))
-    c1 = Client("a", model, data, ClientConfig(momentum=0.9), batch_size=16)
-    c2 = Client("b", model, data, ClientConfig(momentum=0.0), batch_size=16)
+    c1 = Client("sgd_a", model, data, ClientConfig(), batch_size=16)
+    c2 = Client("sgd_b", model, data, ClientConfig(momentum=0.0),
+                batch_size=16)
+    c3 = Client("adam_c", model, data, ClientConfig(optimizer="adamw"),
+                batch_size=16)
     params = model.init(jax.random.PRNGKey(0))
-    with pytest.raises(ValueError, match="shared optimizer"):
-        BatchedExecutor(model).run_cohort([c1, c2], params, 0)
+    with pytest.raises(ValueError,
+                       match=r"mix optimizer families.*adam_c.*sgd_a"):
+        BatchedExecutor(model).run_cohort([c1, c2, c3], params, 0)
+    # mixed momentum within one family no longer raises
+    results = BatchedExecutor(model).run_cohort([c1, c2], params, 0)
+    assert len(results) == 2
 
 
 def test_bad_execution_value_rejected():

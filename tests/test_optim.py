@@ -1,10 +1,14 @@
-"""Pure-JAX optimizers vs hand-computed updates."""
+"""Pure-JAX optimizers vs hand-computed updates, and the traced-hyperparam
+variants (per-client vectorization) vs their closure twins."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.optim import adamw, apply_updates, clip_by_global_norm, global_norm, sgd
+from repro.optim import (
+    AdamWHParams, SGDHParams, adamw, adamw_traced, apply_updates,
+    clip_by_global_norm, global_norm, sgd, sgd_traced,
+)
 
 
 def test_sgd_plain():
@@ -58,6 +62,87 @@ def test_adamw_converges_on_quadratic():
         upd, state = opt.update(g, state, params)
         params = apply_updates(params, upd)
     assert abs(float(params["w"][0])) < 1e-2
+
+
+@pytest.mark.parametrize("momentum,weight_decay,nesterov", [
+    (0.0, 0.0, False),
+    (0.9, 0.0, False),
+    (0.9, 0.01, False),
+    (0.9, 0.0, True),
+    (0.5, 0.001, True),
+])
+def test_sgd_traced_matches_closure(momentum, weight_decay, nesterov):
+    """The traced variant runs the same op sequence as the closure sgd, so
+    multi-step trajectories agree bit-for-bit."""
+    lr = 0.1
+    closure = sgd(lr, momentum=momentum, weight_decay=weight_decay,
+                  nesterov=nesterov)
+    traced = sgd_traced(use_momentum=momentum != 0.0,
+                        use_nesterov=nesterov)
+    hp = SGDHParams(lr=jnp.float32(lr), momentum=jnp.float32(momentum),
+                    weight_decay=jnp.float32(weight_decay),
+                    nesterov=jnp.float32(1.0 if nesterov else 0.0))
+    params_c = {"w": jnp.array([1.0, -2.0, 0.5])}
+    params_t = {"w": jnp.array([1.0, -2.0, 0.5])}
+    state_c = closure.init(params_c)
+    state_t = traced.init(params_t, hp)
+    key = jax.random.PRNGKey(0)
+    for _ in range(5):
+        key, k = jax.random.split(key)
+        g = {"w": jax.random.normal(k, (3,))}
+        up_c, state_c = closure.update(g, state_c, params_c)
+        up_t, state_t = traced.update(g, state_t, params_t, hp)
+        params_c = apply_updates(params_c, up_c)
+        params_t = apply_updates(params_t, up_t)
+        np.testing.assert_array_equal(np.asarray(params_c["w"]),
+                                      np.asarray(params_t["w"]))
+
+
+@pytest.mark.parametrize("b1,b2,eps,weight_decay", [
+    (0.9, 0.999, 1e-8, 0.0),
+    (0.8, 0.99, 1e-6, 0.01),
+])
+def test_adamw_traced_matches_closure(b1, b2, eps, weight_decay):
+    lr = 0.01
+    closure = adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    traced = adamw_traced()
+    hp = AdamWHParams(lr=jnp.float32(lr), b1=jnp.float32(b1),
+                      b2=jnp.float32(b2), eps=jnp.float32(eps),
+                      weight_decay=jnp.float32(weight_decay))
+    params_c = {"w": jnp.array([1.0, -2.0, 0.5])}
+    params_t = {"w": jnp.array([1.0, -2.0, 0.5])}
+    state_c = closure.init(params_c)
+    state_t = traced.init(params_t, hp)
+    key = jax.random.PRNGKey(1)
+    for _ in range(5):
+        key, k = jax.random.split(key)
+        g = {"w": jax.random.normal(k, (3,))}
+        up_c, state_c = closure.update(g, state_c, params_c)
+        up_t, state_t = traced.update(g, state_t, params_t, hp)
+        params_c = apply_updates(params_c, up_c)
+        params_t = apply_updates(params_t, up_t)
+        np.testing.assert_allclose(np.asarray(params_c["w"]),
+                                   np.asarray(params_t["w"]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_sgd_traced_vmaps_heterogeneous_cohort():
+    """One vmapped update with (N,) hyperparam vectors == N separate
+    closure optimizers."""
+    hps = [(0.1, 0.9, 0.0, 0.0), (0.02, 0.0, 0.01, 0.0),
+           (0.3, 0.5, 0.0, 1.0)]
+    traced = sgd_traced(use_momentum=True, use_nesterov=True)
+    hp_vec = SGDHParams(*(jnp.asarray([h[i] for h in hps], jnp.float32)
+                          for i in range(4)))
+    params = jnp.stack([jnp.array([1.0, -1.0])] * 3)
+    grads = jnp.asarray([[0.5, -1.0], [1.0, 2.0], [-0.3, 0.1]])
+    state = jnp.zeros_like(params) + 0.2      # nonzero momentum buffer
+    upd, _ = jax.vmap(traced.update)(grads, state, params, hp_vec)
+    for i, (lr, m, wd, nest) in enumerate(hps):
+        closure = sgd(lr, momentum=m, weight_decay=wd, nesterov=bool(nest))
+        up_c, _ = closure.update(grads[i], state[i], params[i])
+        np.testing.assert_allclose(np.asarray(upd[i]), np.asarray(up_c),
+                                   rtol=1e-6, atol=1e-7)
 
 
 def test_clip_by_global_norm():

@@ -1,0 +1,216 @@
+"""Per-client optimizer heterogeneity: config knobs, sampling, validation.
+
+* ``system_heterogeneity.hyperparam_choices`` samples per-client optimizer
+  hyperparameters deterministically and the batched engine still matches
+  sequential execution;
+* invalid knob values (unknown fields, ``optimizer``, empty/NaN/negative
+  choices) raise loudly at init;
+* negative/NaN per-client hyperparameters are rejected at ``Client``
+  construction, naming the client;
+* lr-only heterogeneous cohorts keep the lean momentum-free program.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro as easyfl
+from repro.core.config import (
+    ClientConfig, SystemHeterogeneityConfig, validate_hyperparam_choices,
+)
+from repro.simulation.heterogeneity import SystemHeterogeneity
+
+
+# ---------------------------------------------------------------------------
+# sampling knob end-to-end
+# ---------------------------------------------------------------------------
+
+
+def _run(execution, het=None, rounds=3):
+    easyfl.reset()
+    easyfl.init({
+        "model": "linear", "dataset": "synthetic",
+        "data": {"num_clients": 12, "batch_size": 32},
+        "server": {"rounds": rounds, "clients_per_round": 5},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "system_heterogeneity": het or {},
+        "resources": {"execution": execution},
+    })
+    res = easyfl.run()
+    easyfl.reset()
+    return res
+
+
+def _assert_equivalent(rs, rb):
+    for a, b in zip(jax.tree_util.tree_leaves(rs["params"]),
+                    jax.tree_util.tree_leaves(rb["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        [h["train_loss"] for h in rs["history"]],
+        [h["train_loss"] for h in rb["history"]], rtol=1e-4)
+
+
+def test_sampled_hyperparams_batched_equals_sequential():
+    """The low-code path: momentum/wd/nesterov sampled per client via the
+    heterogeneity config; batched and sequential engines must agree."""
+    het = {"hyperparam_choices": {"momentum": (0.0, 0.5, 0.9),
+                                  "weight_decay": (0.0, 0.01),
+                                  "nesterov": (False, True)}}
+    _assert_equivalent(_run("sequential", het), _run("batched", het))
+
+
+def test_sampled_mu_and_clip_compose_with_hyperparams():
+    """FedProx per-client mu and grad clipping ride the same CohortVectors
+    as the optimizer hyperparams — all sampled, still equivalent."""
+    het = {"hyperparam_choices": {"momentum": (0.0, 0.9),
+                                  "proximal_mu": (0.0, 0.01, 0.1),
+                                  "max_grad_norm": (0.0, 1.0)}}
+    _assert_equivalent(_run("sequential", het), _run("batched", het))
+
+
+def test_sampling_is_deterministic_per_client():
+    cfg = SystemHeterogeneityConfig(
+        hyperparam_choices={"momentum": (0.0, 0.5, 0.9),
+                            "lr": (0.01, 0.1)})
+    a = SystemHeterogeneity(cfg)
+    b = SystemHeterogeneity(cfg)
+    ids = [f"client_{i:04d}" for i in range(50)]
+    for cid in ids:
+        assert a.hyperparam_overrides(cid) == b.hyperparam_overrides(cid)
+    sampled = {tuple(a.hyperparam_overrides(c).items()) for c in ids}
+    assert len(sampled) > 1          # actually heterogeneous
+    # different seed -> different assignment somewhere
+    c = SystemHeterogeneity(dataclasses.replace(cfg, seed=7))
+    assert any(a.hyperparam_overrides(i) != c.hyperparam_overrides(i)
+               for i in ids)
+
+
+def test_sampling_preserves_python_types():
+    het = SystemHeterogeneity(SystemHeterogeneityConfig(
+        hyperparam_choices={"nesterov": (False, True)}))
+    v = het.hyperparam_overrides("x")["nesterov"]
+    assert isinstance(v, bool)
+
+
+def test_sampling_independent_of_speed_enabled_flag():
+    """hyperparam_choices works without enabled=True (which gates only the
+    virtual-clock speed simulation)."""
+    het = SystemHeterogeneity(SystemHeterogeneityConfig(
+        enabled=False, hyperparam_choices={"momentum": (0.0, 0.9)}))
+    assert het.hyperparam_overrides("c") != {}
+    assert het.speed_ratio("c") == 1.0
+
+
+# ---------------------------------------------------------------------------
+# knob validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("choices,match", [
+    ({"optimizer": ("sgd", "adamw")}, "not per-client sampleable"),
+    ({"no_such_field": (1,)}, "not per-client sampleable"),
+    ({"momentum": ()}, "non-empty"),
+    ({"momentum": 0.9}, "non-empty|sequence"),
+    ({"momentum": (0.5, 1.5)}, "invalid value"),
+    ({"momentum": (float("nan"),)}, "invalid value"),
+    ({"lr": (0.1, -0.1)}, "invalid value"),
+    ({"adam_b1": (1.0,)}, "invalid value"),
+    ({"adam_eps": (0.0,)}, "invalid value"),
+    ({"weight_decay": (-1e-4,)}, "invalid value"),
+    ("momentum", "mapping"),
+])
+def test_hyperparam_choices_validation_rejects(choices, match):
+    with pytest.raises(ValueError, match=match):
+        validate_hyperparam_choices(choices)
+
+
+def test_bad_hyperparam_choices_raise_at_trainer_init():
+    easyfl.reset()
+    easyfl.init({
+        "model": "linear", "dataset": "synthetic",
+        "system_heterogeneity": {"hyperparam_choices": {"momentum": (2.0,)}},
+    })
+    with pytest.raises(ValueError, match="invalid value"):
+        easyfl.run()
+    easyfl.reset()
+
+
+# ---------------------------------------------------------------------------
+# per-client hyperparameter validation at Client construction
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("over", [
+    {"lr": -0.1}, {"lr": float("nan")}, {"momentum": -0.5},
+    {"momentum": 1.0}, {"weight_decay": -1.0}, {"adam_b1": float("nan")},
+    {"adam_b2": 1.0}, {"adam_eps": -1e-8}, {"proximal_mu": -0.1},
+    {"max_grad_norm": float("-inf")},
+])
+def test_client_rejects_invalid_hyperparams_naming_client(over):
+    from repro.core.client import Client
+    from repro.data.fed_data import ClientData
+    from repro.models.small import linear_model
+
+    rng = np.random.RandomState(0)
+    data = ClientData(rng.randn(8, 64).astype(np.float32),
+                      rng.randint(0, 10, 8).astype(np.int32))
+    cfg = dataclasses.replace(ClientConfig(), **over)
+    field = next(iter(over))
+    with pytest.raises(ValueError, match=f"bad_client.*{field}"):
+        Client("bad_client", linear_model(), data, cfg, batch_size=8)
+
+
+# ---------------------------------------------------------------------------
+# lr-only cohorts keep the lean (momentum-free where possible) fast path
+# ---------------------------------------------------------------------------
+
+
+def test_cohort_larger_than_optimizer_cache_still_vectorizes():
+    """get_optimizer lru-caches 128 instances; a config-derived cohort
+    with more distinct hyperparam combos than that must still be
+    recognized as from-config (name equality, not object identity) and
+    vectorize instead of being misdiagnosed as hand-assigned."""
+    from repro.core.batched import BatchedExecutor
+    from repro.core.client import Client
+    from repro.data.fed_data import ClientData
+    from repro.models.small import linear_model
+
+    model = linear_model()
+    rng = np.random.RandomState(0)
+    data = ClientData(rng.randn(8, 64).astype(np.float32),
+                      rng.randint(0, 10, 8).astype(np.int32))
+    clients = [
+        Client(f"c{i}", model, data,
+               ClientConfig(local_epochs=1, lr=0.001 * (i + 1)),
+               batch_size=8)
+        for i in range(140)
+    ]
+    vec, opt = BatchedExecutor.cohort_vectors(clients, 256)
+    np.testing.assert_allclose(vec.hp.lr[:140],
+                               [0.001 * (i + 1) for i in range(140)],
+                               rtol=1e-6)
+
+
+def test_lr_only_cohort_skips_momentum_state():
+    """A zero-momentum cohort heterogeneous only in lr must build the
+    momentum-free traced SGD (empty opt-state), like the closure path."""
+    from repro.core.batched import BatchedExecutor
+    from repro.core.client import Client
+    from repro.data.fed_data import ClientData
+    from repro.models.small import linear_model
+
+    model = linear_model()
+    rng = np.random.RandomState(0)
+    clients = []
+    for i, lr in enumerate([0.1, 0.02, 0.3]):
+        data = ClientData(rng.randn(32, 64).astype(np.float32),
+                          rng.randint(0, 10, 32).astype(np.int32))
+        cfg = ClientConfig(local_epochs=1, lr=lr, momentum=0.0)
+        clients.append(Client(f"c{i}", model, data, cfg, batch_size=16))
+    vec, opt = BatchedExecutor.cohort_vectors(clients, 4)
+    assert "momentum=False" in opt.name
+    assert opt.init({"w": np.zeros(2)}, vec.hp) == ()
+    assert vec.hp.lr.shape == (4,)
+    np.testing.assert_allclose(vec.hp.lr[:3], [0.1, 0.02, 0.3])

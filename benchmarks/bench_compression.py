@@ -1,21 +1,91 @@
-"""Compression stage benchmark (supports Table V's STC row): wire-size
-reduction, round-trip quality, and kernel-vs-oracle throughput."""
+"""Compression benchmarks (supports Table V's STC row): wire-size
+reduction, round-trip quality, kernel-vs-oracle throughput, and the
+round-level in-program (no-gather) vs gathering compressed cohort paths.
+
+The round-level pair is the regression surface for the compressed fast
+path: a batched STC round at N=50 through the in-program pipeline
+(``BatchedExecutor.compress_stacked`` + stacked aggregation — updates
+never gather to host) vs the same round forced onto the gathering path
+(per-client Python compression stage, the pre-fast-path behavior, forced
+by a compression-stage *override* which the engine cannot vectorize).
+``collect_rounds()`` feeds ``benchmarks/run.py --json`` and is gated by
+``scripts/check_bench.py`` (in-program must be faster at N >= 50).
+"""
 from __future__ import annotations
+
+import time
+from typing import Dict, Iterable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, timeit
 from repro.core import compression as comp
+from repro.core.client import Client
 from repro.kernels import ops, ref
+
+ROUND_NS = (50,)
+
+
+class _GatheringCompressionClient(Client):
+    """Built-in compression semantics, but as a *stage override* — the
+    batched engine cannot see inside an override, so it falls back to the
+    gathering path.  This pins the pre-fast-path behavior for timing."""
+
+    def compression(self, result):
+        return Client.compression(self, result)
+
+
+def _make_trainer(n: int, method: str, gathering: bool):
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.core.server import Server
+    from repro.data.fed_data import build_federated_data
+    from repro.models.registry import get_model
+
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": n, "batch_size": 32},
+        "server": {"rounds": 2, "clients_per_round": n, "test_every": 0},
+        "client": {"local_epochs": 2, "lr": 0.1, "compression": method,
+                   "stc_sparsity": 0.01},
+        "resources": {"execution": "batched"},
+        "tracking": {"enabled": False},
+    })
+    model = get_model(cfg.model)
+    fed = build_federated_data(cfg.data)
+    client_cls = _GatheringCompressionClient if gathering else Client
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test),
+                      client_cls=client_cls)
+    trainer.server.params = model.init(jax.random.PRNGKey(cfg.seed))
+    return trainer
+
+
+def _round_time(n: int, method: str, gathering: bool) -> float:
+    trainer = _make_trainer(n, method, gathering)
+    trainer.run_round(0)                      # warm-up (compile)
+    t0 = time.perf_counter()
+    trainer.run_round(1)
+    return time.perf_counter() - t0
+
+
+def collect_rounds(ns: Iterable[int] = ROUND_NS,
+                   method: str = "stc") -> Dict[str, Dict]:
+    """In-program vs gathering compressed-round times, keyed for
+    ``scripts/check_bench.py``."""
+    out: Dict[str, Dict] = {"compressed_inprogram": {},
+                            "compressed_gathering": {}}
+    for n in ns:
+        out["compressed_gathering"][str(n)] = _round_time(n, method, True)
+        out["compressed_inprogram"][str(n)] = _round_time(n, method, False)
+    return out
 
 
 def main():
     rows = []
-    key = jax.random.PRNGKey(0)
-    update = {"w1": jax.random.normal(key, (256, 512)),
-              "w2": jax.random.normal(key, (1024, 128))}
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    update = {"w1": jax.random.normal(k1, (256, 512)),
+              "w2": jax.random.normal(k2, (1024, 128))}
     dense_bytes = comp.payload_bytes(update)
     stc = comp.compress(update, "stc", 0.01)
     int8 = comp.compress(update, "int8")
@@ -25,6 +95,7 @@ def main():
     rows.append(("comp_int8_bytes", comp.payload_bytes(int8),
                  f"{dense_bytes / comp.payload_bytes(int8):.1f}x smaller"))
 
+    key = jax.random.PRNGKey(1)
     x = jax.random.normal(key, (1 << 20,))
     ref_s = timeit(lambda: jax.block_until_ready(ref.stc_ref(x, 0.01)))
     rows.append(("stc_ref_us_per_call", ref_s * 1e6,
@@ -32,11 +103,24 @@ def main():
     kern_s = timeit(lambda: jax.block_until_ready(ops.stc_compress(x, 0.01)))
     rows.append(("stc_kernel_interpret_us_per_call", kern_s * 1e6,
                  "Pallas interpret mode (CPU; compiled path is TPU-only)"))
+    xb = x.reshape(8, -1)
+    bat_s = timeit(lambda: jax.block_until_ready(
+        ops.stc_compress_batched(xb, 0.01)[0]))
+    rows.append(("stc_batched_kernel_us_per_call", bat_s * 1e6,
+                 "8-client stacked variant, same 1M elems + per-client nnz"))
 
     q, s = ops.quantize(x)
     xd = ops.dequantize(q, s, x.shape)
     rel = float(jnp.max(jnp.abs(xd - x)) / jnp.max(jnp.abs(x)))
     rows.append(("int8_roundtrip_rel_err", rel, "bounded by tile max/127"))
+
+    rounds = collect_rounds()
+    for n in sorted(rounds["compressed_inprogram"], key=int):
+        fast = rounds["compressed_inprogram"][n]
+        gather = rounds["compressed_gathering"][n]
+        rows.append((f"compressed_round_gathering_s_N{n}", gather, ""))
+        rows.append((f"compressed_round_inprogram_s_N{n}", fast,
+                     f"{gather / fast:.1f}x faster (no-gather STC round)"))
     emit(rows)
     return rows
 

@@ -38,10 +38,12 @@ BENCHES = [
 
 
 def run_json(path: str) -> None:
-    """Regression mode: emit sequential/batched round-time + aggregation
-    numbers as JSON (consumed by scripts/check_bench.py)."""
-    from benchmarks import bench_batched
+    """Regression mode: emit sequential/batched round-time, aggregation,
+    and compressed in-program-vs-gathering round numbers as JSON
+    (consumed by scripts/check_bench.py)."""
+    from benchmarks import bench_batched, bench_compression
     data = bench_batched.collect()
+    data.update(bench_compression.collect_rounds())
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"# wrote {path}")

@@ -6,8 +6,10 @@ Benchmark mode (batched execution engine):
     python scripts/check_bench.py BENCH_roundtime.json
 
 Fails (exit 1) if batched round time is not faster than sequential at any
-cohort size N >= 50 — the scaling regime the engine exists for.  Small
-cohorts are reported but not gated (dispatch overhead there is noise-level).
+cohort size N >= 50 — the scaling regime the engine exists for — or if a
+compressed (STC) round through the in-program no-gather pipeline is not
+faster than the gathering path at N >= 50.  Small cohorts are reported but
+not gated (dispatch overhead there is noise-level).
 
 Test-baseline mode ("no worse than seed", mechanically):
 
@@ -118,6 +120,22 @@ def check(data: dict) -> int:
               f"[{status}]")
         if retraces != 0:
             failures += 1
+    # compressed rounds: the in-program (no-gather) pipeline must beat the
+    # gathering path (per-client Python compression) at gated cohort sizes
+    for n in sorted(data.get("compressed_gathering", {}), key=int):
+        gather = data["compressed_gathering"][n]
+        fast = data.get("compressed_inprogram", {}).get(n)
+        if fast is None:
+            print(f"compressed N={n}: missing in-program number")
+            failures += 1
+            continue
+        speedup = gather / fast if fast else float("inf")
+        gated = int(n) >= GATE_MIN_N
+        status = "ok" if fast < gather else ("FAIL" if gated else "warn")
+        print(f"compressed N={n}: gathering={gather:.4f}s "
+              f"in-program={fast:.4f}s ({speedup:.1f}x) [{status}]")
+        if gated and fast >= gather:
+            failures += 1
     return failures
 
 
@@ -138,8 +156,8 @@ def main() -> None:
         data = json.load(f)
     failures = check(data)
     if failures:
-        print(f"{failures} regression(s): batched not faster than sequential "
-              f"at N >= {GATE_MIN_N}")
+        print(f"{failures} regression(s): batched/compressed fast paths not "
+              f"faster than their baselines at N >= {GATE_MIN_N}")
         sys.exit(1)
     print("check_bench: ok")
 

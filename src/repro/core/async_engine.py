@@ -167,13 +167,19 @@ class AsyncEngine:
                                    else min(self._per_step_cost, cost))
             if event_cost is None:
                 event_cost = self._per_step_cost
+            # one batched host sync for the wave's wire accounting (the
+            # in-program compression path already stamped payload_bytes
+            # from its per-client nnz)
+            missing = [r for r in results if "payload_bytes" not in r]
+            if missing:
+                for r, pb in zip(missing, comp.payload_bytes_many(
+                        [r["update"] for r in missing])):
+                    r["payload_bytes"] = pb
             for res in results:
                 cid = res["client_id"]
                 base = res["metrics"]["batches"] * event_cost
                 duration = self.het.simulate_time(cid, base)
-                state["up_bytes"] += (
-                    res["payload_bytes"] if "payload_bytes" in res
-                    else comp.payload_bytes(res["update"]))
+                state["up_bytes"] += res["payload_bytes"]
                 heapq.heappush(heap, InFlight(
                     finish_time=now + duration, seq=state["seq"],
                     client_id=cid, dispatch_time=now,

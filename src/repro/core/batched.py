@@ -61,6 +61,21 @@ step-count share of that wall time.  Shard placement is an *implementation*
 detail of the simulator host, not part of the simulated federation, so the
 heterogeneity simulator and GreedyAda see exactly the same inputs as the
 unsharded batched path.
+
+In-program compression (the paper's flagship STC plugin, §V-B, on the
+fast path): :meth:`BatchedExecutor.compress_stacked` sparsifies (STC) or
+quantizes (int8) the stacked cohort update with batched 2-D-grid Pallas
+kernels — per shard of the client mesh when distributed — with
+error-feedback residuals held in a device-resident per-client-id store,
+so compressed rounds keep the no-gather pipeline (compress → aggregate
+entirely on device) and wire sizes come from the kernels' per-client nnz.
+Round-over-round residual semantics match ``Client._residual`` exactly,
+including across async dispatch waves.  The cohort *data* (x/y) comes
+from a device-resident per-client pool
+(:meth:`BatchedExecutor._stacked_data`): each client's padded rows upload
+host→device once, cohorts assemble by a device row gather regardless of
+selection order/composition, and only the shuffled batch indices are
+rebuilt per round.
 """
 from __future__ import annotations
 
@@ -268,6 +283,11 @@ class BatchedExecutor:
     set (tests use prefixes of the host platform's forced devices to prove
     shard-count invariance)."""
 
+    #: bound on the device-resident per-client data pool (rows); when a
+    #: federation touches more clients than this, the pool resets rather
+    #: than growing without limit
+    DATA_POOL_MAX_CLIENTS = 1024
+
     def __init__(self, model: FLModel, distributed: str = "none",
                  devices: Optional[Sequence] = None):
         if distributed not in ("none", "data"):
@@ -278,6 +298,21 @@ class BatchedExecutor:
         self.distributed = distributed
         self.mesh = (build_client_mesh(devices)
                      if distributed == "data" else None)
+        # device-side per-client data pool: each client's (maxn, ...)
+        # padded x/y rows are uploaded host->device ONCE (datasets are
+        # static); cohorts are assembled by a device-side row gather, so
+        # arbitrary selection order / composition (random permutations,
+        # async waves) all hit the pool — row 0 is reserved all-zero and
+        # backs the bucket-padding rows
+        self._data_pool: Optional[Dict[str, Any]] = None
+        # error-feedback residual store for in-program compression:
+        # client id -> row in the per-leaf (capacity, leaf_size) matrices
+        # of ``_ef_store`` (device-resident f32; rows are gathered into
+        # the stacked cohort before compression and scattered back after,
+        # so round-over-round semantics match ``Client._residual`` exactly
+        # — including across async waves, which share this executor)
+        self._ef_rows: Dict[str, int] = {}
+        self._ef_store: List[Any] = []
 
     # ------------------------------------------------------------------
     def _batch_indices(self, client, round_id: int) -> np.ndarray:
@@ -287,6 +322,91 @@ class BatchedExecutor:
         rows = [cyclic_batches(len(client.data), client._batch_size(), seed + e)
                 for e in range(client.cfg.local_epochs)]
         return np.concatenate(rows).astype(np.int32)
+
+    # ------------------------------------------------------------------
+    def invalidate_data(self, client_id: Optional[str] = None) -> None:
+        """Drop cached device data so the next round re-reads ``c.data``.
+
+        The pool assumes client datasets are **static** (true for every
+        built-in dataset); code that swaps or mutates a client's
+        ``data.x``/``data.y`` mid-run (online FL, re-partitioning) must
+        call this — with the client id, or without arguments to drop the
+        whole pool — or the batched/async fast path keeps training on the
+        first-round snapshot."""
+        if self._data_pool is None:
+            return
+        if client_id is None:
+            self._data_pool = None
+        else:
+            # forget the row; the stale device row is simply never
+            # gathered again and the client re-uploads on next selection
+            self._data_pool["rows"].pop(client_id, None)
+
+    # ------------------------------------------------------------------
+    def _stacked_data(self, clients: Sequence, n_bucket: int, maxn: int):
+        """Stacked (N_bucket, maxn, ...) cohort x/y from the device pool.
+
+        Client datasets are static (see :meth:`invalidate_data` for the
+        escape hatch), so each client's padded data rows are built +
+        uploaded host->device only the first time the client appears;
+        every later round — regardless of selection order or cohort
+        composition (random permutations, async replacement waves) —
+        assembles the cohort with one device-side row gather.  Only the
+        shuffled batch *indices* are rebuilt per round.  The pool's
+        sample-dim padding grows monotonically to the bucketed federation
+        max (a handful of recompiles at most), and the pool resets when a
+        federation touches more than ``DATA_POOL_MAX_CLIENTS`` clients.
+        Under the client mesh the gathered cohort is placed on its
+        ``NamedSharding`` so jit never re-shards it."""
+        x0 = np.asarray(clients[0].data.x)
+        y0 = np.asarray(clients[0].data.y)
+        pool = self._data_pool
+        if pool is not None:
+            fresh = sum(c.client_id not in pool["rows"] for c in clients)
+            # bound the *storage* rows (minus the zero row), not the id
+            # map: invalidate_data orphans storage rows, and orphans must
+            # still count toward the memory bound or repeated
+            # invalidate+re-upload cycles would grow the pool unbounded
+            if (pool["x"].shape[2:] != x0.shape[1:]
+                    or pool["x"].dtype != x0.dtype
+                    or pool["x"].shape[0] - 1 + fresh
+                    > self.DATA_POOL_MAX_CLIENTS):
+                pool = None            # dataset changed / pool full: reset
+        if pool is None:
+            pool = {"rows": {}, "maxn": maxn,
+                    "x": jnp.zeros((1, maxn) + x0.shape[1:], x0.dtype),
+                    "y": jnp.zeros((1, maxn) + y0.shape[1:], y0.dtype)}
+            self._data_pool = pool
+        if maxn > pool["maxn"]:
+            pad = ((0, 0), (0, maxn - pool["maxn"]))
+            pool["x"] = jnp.pad(pool["x"],
+                                pad + ((0, 0),) * (pool["x"].ndim - 2))
+            pool["y"] = jnp.pad(pool["y"],
+                                pad + ((0, 0),) * (pool["y"].ndim - 2))
+            pool["maxn"] = maxn
+        new = [c for c in clients if c.client_id not in pool["rows"]]
+        if new:
+            nx = np.zeros((len(new), pool["maxn"]) + x0.shape[1:], x0.dtype)
+            ny = np.zeros((len(new), pool["maxn"]) + y0.shape[1:], y0.dtype)
+            for i, c in enumerate(new):
+                n = len(c.data)
+                nx[i, :n] = c.data.x
+                ny[i, :n] = c.data.y
+            base = pool["x"].shape[0]
+            pool["x"] = jnp.concatenate([pool["x"], jnp.asarray(nx)])
+            pool["y"] = jnp.concatenate([pool["y"], jnp.asarray(ny)])
+            for i, c in enumerate(new):
+                pool["rows"][c.client_id] = base + i
+        rows = np.zeros((n_bucket,), np.int32)      # row 0 = zero padding
+        rows[: len(clients)] = [pool["rows"][c.client_id] for c in clients]
+        xd = jnp.take(pool["x"], jnp.asarray(rows), axis=0)
+        yd = jnp.take(pool["y"], jnp.asarray(rows), axis=0)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sh = NamedSharding(self.mesh, P(CLIENT_AXIS))
+            xd, yd = jax.device_put(xd, sh), jax.device_put(yd, sh)
+        return xd, yd
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -413,16 +533,10 @@ class BatchedExecutor:
         S = bucket_pow2(max(len(ix) for ix in idx_list))
         maxn = bucket_pow2(max(len(c.data) for c in clients))
 
-        x0 = np.asarray(clients[0].data.x)
-        y0 = np.asarray(clients[0].data.y)
-        x = np.zeros((Nb, maxn) + x0.shape[1:], dtype=x0.dtype)
-        y = np.zeros((Nb, maxn) + y0.shape[1:], dtype=y0.dtype)
+        xd, yd = self._stacked_data(clients, Nb, maxn)
         idx = np.zeros((Nb, S, B), dtype=np.int32)
         n_steps = np.zeros((Nb,), dtype=np.int32)
         for i, c in enumerate(clients):
-            n = len(c.data)
-            x[i, :n] = c.data.x
-            y[i, :n] = c.data.y
             idx[i, : len(idx_list[i])] = idx_list[i]
             n_steps[i] = len(idx_list[i])
 
@@ -445,7 +559,7 @@ class BatchedExecutor:
             # CPU backends may decline the donation; that is fine.
             warnings.filterwarnings("ignore", message=".*donated.*")
             updates, loss, acc = program(
-                stacked, jnp.asarray(x), jnp.asarray(y), jnp.asarray(idx),
+                stacked, xd, yd, jnp.asarray(idx),
                 jnp.asarray(n_steps),
                 jax.tree_util.tree_map(jnp.asarray, vec), global_params)
         jax.block_until_ready(updates)
@@ -488,33 +602,186 @@ class BatchedExecutor:
         return self.per_client_results(clients, st)
 
     # ------------------------------------------------------------------
-    def aggregate_stacked(self, st: Dict[str, Any],
-                          interpret: Optional[bool] = None) -> PyTree:
-        """FedAvg delta from stacked (sharded) updates without gathering.
+    # In-program compression (error feedback on device, per client id)
+    # ------------------------------------------------------------------
+    def _ef_gather(self, clients: Sequence, leaves: List[Any]) -> List[Any]:
+        """Fetch (creating/growing storage as needed) the cohort's
+        error-feedback residual rows, one (N, leaf_size) f32 matrix per
+        update leaf.  Rows are keyed by client id — the store doubles in
+        capacity as new clients appear (append-only row indices, so async
+        waves hit the same rows round after round).  Under the client mesh
+        the store itself stays sharded along its row axis, so the
+        round-trip gather/scatter never funnels residuals through one
+        device."""
+        sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+        if not self._ef_store:
+            self._ef_store = [jnp.zeros((0, s), jnp.float32) for s in sizes]
+        if [l.shape[1] for l in self._ef_store] != sizes:
+            raise ValueError(
+                "error-feedback store leaf sizes "
+                f"{[l.shape[1] for l in self._ef_store]} do not match the "
+                f"update structure {sizes}; one executor serves one model")
+        for c in clients:
+            if c.client_id not in self._ef_rows:
+                self._ef_rows[c.client_id] = len(self._ef_rows)
+        need = len(self._ef_rows)
+        cap = self._ef_store[0].shape[0]
+        if need > cap:
+            floor = 8 if self.mesh is None else max(8, self.mesh.size)
+            newcap = bucket_pow2(need, floor=floor)
+            self._ef_store = [
+                jnp.pad(m, ((0, newcap - cap), (0, 0)))
+                for m in self._ef_store]
+            if self.mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
 
-        Flattens the stacked update pytree to (N_bucket, D) — client dim
-        still sharded over the mesh — and reduces per-shard partial
-        weighted sums with the ``psum``-epilogue kernel.  Returns the
-        weighted-average (f32) delta as a pytree shaped like the global
-        params (the updates mirror their structure).
+                sh = NamedSharding(self.mesh, P(CLIENT_AXIS, None))
+                self._ef_store = [jax.device_put(m, sh)
+                                  for m in self._ef_store]
+        rows = np.asarray([self._ef_rows[c.client_id] for c in clients])
+        return [m[rows] for m in self._ef_store], rows
+
+    # ------------------------------------------------------------------
+    def compress_stacked(self, st: Dict[str, Any], clients: Sequence,
+                         method: str, stc_sparsity: float = 0.01,
+                         interpret: Optional[bool] = None) -> Dict[str, Any]:
+        """In-program update compression with error feedback.
+
+        Replaces ``st["updates"]`` with the *sent* (compressed then
+        dense-decoded) values — exactly what the sequential
+        ``Client.compression`` stage produces via
+        ``compression.compress_with_feedback``, but vectorized over the
+        stacked cohort and never leaving the device(s):
+
+        * each stacked leaf (N_bucket, *shape) is flattened to
+          (N_bucket, size) and, error-corrected by the client's stored
+          residual, run through the batched Pallas kernel
+          (``kernels.stc_topk.stc_compress_batched`` /
+          ``kernels.quant.int8_roundtrip_batched``) — per shard of the
+          client mesh when distributed;
+        * leaves smaller than 64 elements stay dense (matching the
+          sequential stage) and reset their residual;
+        * the new residual (corrected - sent) is scattered back into the
+          per-client-id store, so round-over-round semantics match
+          ``Client._residual`` — including across async dispatch waves;
+        * per-client STC non-zero counts ride along in ``st["nnz"]`` (one
+          (N_bucket,) device vector per compressed leaf) for wire-size
+          accounting via :meth:`per_client_payload_bytes` — no per-leaf
+          host syncs, no gathered updates.
         """
+        if method not in ("stc", "int8"):
+            raise ValueError(
+                f"unknown in-program compression {method!r}; expected "
+                f"'stc' or 'int8'")
+        from repro.core.compression import DENSE_MIN_ELEMS
+        from repro.kernels import ops as kops
+
+        leaves, treedef = jax.tree_util.tree_flatten(st["updates"])
+        nb = leaves[0].shape[0]
+        n = len(clients)
+        residuals, rows = self._ef_gather(clients, leaves)
+        itp = kops.get_interpret(interpret)
+        sharding = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sharding = NamedSharding(self.mesh, P(CLIENT_AXIS, None))
+        sent_leaves, new_res, nnz_list, sizes = [], [], [], []
+        for leaf, res in zip(leaves, residuals):
+            size = int(np.prod(leaf.shape[1:], dtype=np.int64))
+            sizes.append(size)
+            flat = leaf.reshape(nb, size).astype(jnp.float32)
+            resb = jnp.pad(res, ((0, nb - n), (0, 0)))
+            if sharding is not None:
+                resb = jax.device_put(resb, sharding)
+            corrected = flat + resb
+            if size < DENSE_MIN_ELEMS:    # tiny tensors stay dense
+                sent, nnz = corrected, None
+            elif method == "stc":
+                sent, nnz = kops.stc_compress_batched(
+                    corrected, stc_sparsity, interpret=itp, mesh=self.mesh)
+            else:
+                sent, _ = kops.int8_roundtrip_batched(
+                    corrected, interpret=itp, mesh=self.mesh)
+                nnz = None
+            new_res.append((corrected - sent)[:n])
+            sent_leaves.append(sent.reshape(leaf.shape))
+            nnz_list.append(nnz)
+        self._ef_store = [
+            m.at[rows].set(r) for m, r in zip(self._ef_store, new_res)]
+        out = dict(st)
+        out["updates"] = jax.tree_util.tree_unflatten(treedef, sent_leaves)
+        out["nnz"] = nnz_list
+        out["comp_sizes"] = sizes
+        out["compression"] = method
+        return out
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def per_client_payload_bytes(st: Dict[str, Any]) -> List[int]:
+        """Wire sizes of a compressed stacked round, one host sync total.
+
+        Mirrors ``compression.payload_bytes`` leaf-for-leaf: STC leaves
+        from the in-program per-client nnz counts (all fetched in one
+        ``jax.device_get``), int8 leaves 1 byte/element + scale, tiny
+        dense leaves (size < ``compression.DENSE_MIN_ELEMS``) raw f32
+        bytes."""
+        from repro.core.compression import DENSE_MIN_ELEMS
+
+        method = st["compression"]
+        n = len(st["num_samples"])
+        base = 0
+        for size, nnz in zip(st["comp_sizes"], st["nnz"]):
+            if size < DENSE_MIN_ELEMS:
+                base += size * 4                      # dense f32 leaf
+            elif method == "int8":
+                base += size + 4                      # int8 + scale
+        totals = np.full((n,), base, np.int64)
+        stc_nnz = [a for a in st["nnz"] if a is not None]
+        if stc_nnz:
+            for counts in jax.device_get(stc_nnz):    # one transfer
+                counts = counts[:n].astype(np.int64)
+                # vectorized compression.stc_leaf_bytes
+                totals += counts * 4 + (counts + 7) // 8 + 4
+        return [int(t) for t in totals]
+
+    # ------------------------------------------------------------------
+    def aggregate_stacked(self, st: Dict[str, Any],
+                          interpret: Optional[bool] = None,
+                          use_kernel: bool = False) -> PyTree:
+        """FedAvg delta from stacked updates without per-client gathering.
+
+        Flattens the stacked update pytree to (N_bucket, D) and reduces it
+        in place: under the client mesh, per-shard partial weighted sums
+        with the ``psum``-epilogue kernel (client dim stays sharded); on a
+        single device, one stacked einsum (or the chunked streaming Pallas
+        kernel with ``use_kernel``) over the already-stacked matrix — no
+        per-client slicing either way.  Compressed (``compress_stacked``)
+        and dense stacked updates flow through identically: compression
+        happens upstream of the weighted sum, and staleness/weight folding
+        is untouched.  Returns the weighted-average (f32) delta as a
+        pytree shaped like the global params (the updates mirror their
+        structure)."""
         from repro.core.aggregation import fedavg_weights
         from repro.kernels import ops as kops
         from repro.kernels.fedavg_agg import fedavg_aggregate_sharded
 
-        if self.mesh is None:
-            raise ValueError(
-                'aggregate_stacked needs the client mesh; construct the '
-                'executor with distributed="data"')
         leaves, treedef = jax.tree_util.tree_flatten(st["updates"])
         nb = leaves[0].shape[0]
         num_samples = st["num_samples"]
         w = np.zeros((nb,), np.float32)
         w[: len(num_samples)] = fedavg_weights(num_samples)
         flat = jnp.concatenate([l.reshape(nb, -1) for l in leaves], axis=1)
-        delta = fedavg_aggregate_sharded(
-            flat, jnp.asarray(w), self.mesh,
-            interpret=kops.get_interpret(interpret))
+        if self.mesh is not None:
+            delta = fedavg_aggregate_sharded(
+                flat, jnp.asarray(w), self.mesh,
+                interpret=kops.get_interpret(interpret))
+        elif use_kernel:
+            delta = kops.fedavg_aggregate(flat, jnp.asarray(w),
+                                          interpret=interpret)
+        else:
+            delta = jnp.einsum("n,nd->d", jnp.asarray(w),
+                               flat.astype(jnp.float32))
         # unravel by leaf shape (slices are views; no copy of the model)
         out, off = [], 0
         for leaf in leaves:

@@ -70,6 +70,14 @@ class Client:
         return evaluate(self.model, params, self.data.x, self.data.y)
 
     def compression(self, result: Dict[str, Any]) -> Dict[str, Any]:
+        """Built-in update compression with error feedback.
+
+        The batched/async engines replicate this exact stage *in-program*
+        for the built-in methods (``BatchedExecutor.compress_stacked``:
+        batched Pallas kernels + a per-client-id residual store with the
+        same semantics as ``self._residual``), so the fast path never
+        calls it; subclass overrides of this stage are honored via the
+        gathering fallback."""
         method = self.cfg.compression
         if method in ("none", "", None):
             return result

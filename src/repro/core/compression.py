@@ -5,12 +5,20 @@ Implemented compressors:
 * ``stc``  — Sparse Ternary Compression [Sattler et al., TNNLS'19]: keep the
   top-p fraction of entries by magnitude, replace kept entries with
   ``±mean(|kept|)``.  The k-selection uses *threshold bisection* rather than
-  a global sort — O(iters·n) elementwise work, TPU-friendly, and exactly the
-  algorithm the Pallas kernel (``repro.kernels.stc_topk``) implements
-  per-tile; this pure-jnp version is its oracle.
+  a global sort — O(iters·n) elementwise work, TPU-friendly — applied
+  **per 8192-element tile** of each tensor's flat vector: exactly the
+  algorithm the Pallas kernels (``repro.kernels.stc_topk``, dense and
+  batched-cohort variants) implement, so the compression *stage* and the
+  kernels agree bit-for-bit and the batched engine's in-program
+  compression matches the sequential path.  Tile-local selection trades
+  Sattler et al.'s *global* top-k budget (which can concentrate the whole
+  budget on one layer) for an exact per-tile budget and
+  sort-free TPU mapping; per-tile targets count only the tile's real
+  (unpadded) elements, so small tensors keep the right fraction.
 * ``int8`` — symmetric per-tensor int8 quantization (scale = max|x|/127).
 * error feedback (residual accumulation) for biased compressors, used by the
-  STC client stage.
+  STC client stage (and, vectorized, by the batched engine's residual
+  store — ``repro.core.batched.BatchedExecutor.compress_stacked``).
 
 A compressed message is a pytree of ``CompressedTensor`` leaves; semantics
 are dense-equivalent after ``decompress`` (sparse wire encoding lives in
@@ -25,7 +33,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# One source of truth for the STC tile geometry / bisection iterations: the
+# compression stage and the (dense + batched-cohort) Pallas kernels must
+# pick bit-identical thresholds for the fast-path parity contract.
+from repro.kernels.stc_topk import (
+    BISECT_ITERS as STC_BISECT_ITERS, TILE_SEG as STC_TILE,
+)
+
 PyTree = Any
+
+# Tensors smaller than this stay dense through every compressor — shared by
+# the sequential stage (compress) and the batched in-program path
+# (BatchedExecutor.compress_stacked / per_client_payload_bytes), which must
+# agree bitwise on which leaves compress for the parity + wire accounting.
+DENSE_MIN_ELEMS = 64
 
 
 @dataclass(frozen=True)
@@ -48,14 +69,16 @@ def _is_leaf(x):
 
 
 # ---------------------------------------------------------------------------
-# STC: top-k by threshold bisection (kernel-oracle algorithm)
+# STC: per-tile top-k by threshold bisection (kernel-exact algorithm)
 # ---------------------------------------------------------------------------
 
 
+
 def stc_threshold(absx: jnp.ndarray, keep_frac: float,
-                  iters: int = 16) -> jnp.ndarray:
-    """Bisection for t s.t. ~keep_frac of |x| exceeds t.  Pure elementwise
-    passes; identical algorithm to the Pallas kernel."""
+                  iters: int = STC_BISECT_ITERS) -> jnp.ndarray:
+    """Bisection for a *global* t s.t. ~keep_frac of |x| exceeds t.  Pure
+    elementwise passes.  Kept for reference/experiments: the built-in
+    ``stc`` compressor is tile-local (see :func:`stc_compress_array`)."""
     x = absx.reshape(-1).astype(jnp.float32)
     n = x.size
     target = jnp.asarray(max(int(round(keep_frac * n)), 1), jnp.float32)
@@ -76,17 +99,49 @@ def stc_threshold(absx: jnp.ndarray, keep_frac: float,
 
 
 def stc_compress_array(x: jnp.ndarray, keep_frac: float) -> CompressedTensor:
-    absx = jnp.abs(x.astype(jnp.float32))
-    t = stc_threshold(absx, keep_frac)
-    mask = absx > t
-    nnz = jnp.sum(mask)
-    mu = jnp.sum(absx * mask) / jnp.maximum(nnz, 1)
-    out = jnp.where(mask, jnp.sign(x) * mu, 0.0).astype(x.dtype)
-    return CompressedTensor("stc", out, nnz=nnz)
+    """Tile-local STC of one tensor — the same per-8192-element-tile
+    bisection the Pallas kernels run, in pure jnp: each tile of the flat
+    vector gets its own threshold and ``±mu``, and the per-tile kept-count
+    target uses the tile's *real* (unpadded) element count."""
+    f = x.reshape(-1).astype(jnp.float32)
+    n = f.size
+    pad = (-n) % STC_TILE
+    if pad:
+        f = jnp.pad(f, (0, pad))
+    tiles = f.reshape(-1, STC_TILE)                  # (T, STC_TILE)
+    ax = jnp.abs(tiles)
+    real = jnp.clip(n - jnp.arange(tiles.shape[0]) * STC_TILE, 0, STC_TILE)
+    target = jnp.maximum(
+        jnp.round(jnp.float32(keep_frac) * real.astype(jnp.float32)),
+        1.0)[:, None]
+
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        count = jnp.sum((ax > mid).astype(jnp.float32), axis=1,
+                        keepdims=True)
+        lo = jnp.where(count > target, mid, lo)
+        hi = jnp.where(count > target, hi, mid)
+        return lo, hi
+
+    lo = jnp.zeros((tiles.shape[0], 1), jnp.float32)
+    hi = jnp.max(ax, axis=1, keepdims=True) + 1e-12
+    lo, hi = jax.lax.fori_loop(0, STC_BISECT_ITERS, body, (lo, hi))
+    t = 0.5 * (lo + hi)
+    mask = ax > t
+    cnt = jnp.sum(mask.astype(jnp.float32), axis=1, keepdims=True)
+    mu = jnp.sum(jnp.where(mask, ax, 0.0), axis=1, keepdims=True) \
+        / jnp.maximum(cnt, 1.0)
+    out = jnp.where(mask, jnp.sign(tiles) * mu, 0.0)
+    out = out.reshape(-1)[: n].reshape(x.shape).astype(x.dtype)
+    return CompressedTensor("stc", out, nnz=jnp.sum(cnt).astype(jnp.int32))
 
 
 def int8_compress_array(x: jnp.ndarray) -> CompressedTensor:
-    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12) / 127.0
+    # reciprocal multiply (not `/ 127.0`) so eager and jitted (batched
+    # in-program) paths compute a bitwise-identical scale
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))),
+                        1e-12) * jnp.float32(1.0 / 127.0)
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
     return CompressedTensor("int8", q.astype(jnp.int8), scale=scale)
 
@@ -107,7 +162,7 @@ def compress(tree: PyTree, method: str = "none",
     if method in ("none", "", None):
         return tree
     def one(x):
-        if x.ndim == 0 or x.size < 64:     # tiny tensors stay dense
+        if x.ndim == 0 or x.size < DENSE_MIN_ELEMS:  # tiny tensors stay dense
             return CompressedTensor("dense", x)
         if method == "stc":
             return stc_compress_array(x, stc_sparsity)
@@ -123,28 +178,55 @@ def decompress(tree: PyTree) -> PyTree:
         is_leaf=_is_leaf)
 
 
+def stc_leaf_bytes(nnz: int) -> int:
+    """STC wire format (per Sattler et al.): nnz * (4-byte index + 1 sign
+    bit) + one float mean."""
+    return nnz * 4 + (nnz + 7) // 8 + 4
+
+
 def payload_bytes(tree: PyTree) -> int:
     """Wire size of a (possibly compressed) update.
 
-    STC wire format (per Sattler et al.): nnz * (4-byte index + 1 sign bit)
-    + one float mean; int8: 1 byte/elem + scale; dense: dtype bytes.  Dense
-    sizes go through ``serialize.array_nbytes`` — O(1) per leaf, no
-    serialization — so round accounting stays O(num_leaves).
+    STC wire format via :func:`stc_leaf_bytes`; int8: 1 byte/elem + scale;
+    dense: dtype bytes.  Dense sizes go through ``serialize.array_nbytes``
+    — O(1) per leaf, no serialization — so round accounting stays
+    O(num_leaves), and all STC ``nnz`` device scalars are fetched in ONE
+    ``jax.device_get`` (a per-leaf ``int(leaf.nnz)`` blocks once per leaf).
+    """
+    return payload_bytes_many([tree])[0]
+
+
+def payload_bytes_many(trees) -> list:
+    """:func:`payload_bytes` for many updates with a single host sync.
+
+    All STC ``nnz`` leaves across all trees go through one
+    ``jax.device_get`` (which issues async device→host copies for every
+    leaf before blocking), instead of one blocking transfer per leaf per
+    client — the round-accounting loops in ``core/rounds.py`` and
+    ``core/async_engine.py`` hand the whole cohort's updates here at once.
     """
     from repro.comm.serialize import array_nbytes
-    total = 0
-    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=_is_leaf):
-        if isinstance(leaf, CompressedTensor):
-            if leaf.kind == "stc":
-                nnz = int(leaf.nnz)
-                total += nnz * 4 + (nnz + 7) // 8 + 4
-            elif leaf.kind == "int8":
-                total += int(np.prod(leaf.data.shape)) + 4
+    totals = []
+    pending = []          # flat list of nnz device scalars, in visit order
+    pending_at = []       # (tree_index) aligned with ``pending``
+    for ti, tree in enumerate(trees):
+        total = 0
+        for leaf in jax.tree_util.tree_leaves(tree, is_leaf=_is_leaf):
+            if isinstance(leaf, CompressedTensor):
+                if leaf.kind == "stc":
+                    pending.append(leaf.nnz)
+                    pending_at.append(ti)
+                elif leaf.kind == "int8":
+                    total += int(np.prod(leaf.data.shape)) + 4
+                else:
+                    total += array_nbytes(leaf.data)
             else:
-                total += array_nbytes(leaf.data)
-        else:
-            total += array_nbytes(leaf)
-    return total
+                total += array_nbytes(leaf)
+        totals.append(total)
+    if pending:
+        for ti, nnz in zip(pending_at, jax.device_get(pending)):
+            totals[ti] += stc_leaf_bytes(int(nnz))
+    return totals
 
 
 # ---------------------------------------------------------------------------

@@ -136,9 +136,12 @@ class ClientConfig:
     adam_b1: float = 0.9              # AdamW beta1
     adam_b2: float = 0.999            # AdamW beta2
     adam_eps: float = 1e-8            # AdamW epsilon
-    # client->server update compression: "none" | "stc" | "int8"
+    # client->server update compression: "none" | "stc" | "int8"; built-in
+    # compressors run in-program on the batched/async fast path (batched
+    # Pallas kernels + device-resident error feedback, no host gathering)
     compression: str = "none"
     stc_sparsity: float = 0.01        # keep fraction for STC top-k
+    #                                   (tile-local per-8192-element budget)
     # FedProx proximal term (0 disables; strategy plugin can override train)
     proximal_mu: float = 0.0
     max_grad_norm: float = 0.0        # 0 = no clipping
@@ -268,7 +271,13 @@ class ResourceConfig:
       the measured per-step cost.  Requires a uniform batch size and
       optimizer family across the cohort (per-client learning rates are
       vectorized); custom ``train``-stage overrides are not consulted
-      (compression/encryption/upload overrides still are).
+      (compression/encryption/upload overrides still are).  With default
+      post-train stages and FedAvg, rounds take the no-gather fast path:
+      built-in ``client.compression`` (stc/int8) runs in-program (batched
+      Pallas kernels + a device-resident error-feedback store) and
+      aggregation consumes the stacked updates directly — per-client
+      updates never gather to the host; stage overrides fall back to
+      per-client gathering.
     * ``"async"`` — FedBuff-style overlapping cohorts on a virtual-clock
       event loop (``repro.core.async_engine``): up to ``max_concurrency``
       clients are in flight at once, each completion frees a slot that is

@@ -129,15 +129,31 @@ class Trainer:
         ``train`` overrides cannot be vectorized and raise instead of
         silently diverging.
 
-        Returns ``(results, aggregated)``.  Under
-        ``resources.distributed="data"`` with default post-train stages and
-        plain FedAvg, aggregation happens *on the mesh* (per-shard partial
-        weighted sums + psum — ``BatchedExecutor.aggregate_stacked``) and
-        ``aggregated=True``: the per-client results then carry metrics and
-        byte accounting but no ``"update"``, because client updates never
-        gather to the host.  Any compression / custom stage / non-FedAvg
-        aggregator falls back to the gathering path (still mesh-sharded
-        compute, per-client update extraction)."""
+        Returns ``(results, aggregated)``.  With default post-train stages
+        and plain FedAvg, synchronous batched rounds take the **no-gather
+        fast path**: the stacked updates are — for the built-in
+        ``client.compression = "stc"/"int8"`` — compressed *inside* the
+        stacked pipeline (batched Pallas kernels + the executor's
+        error-feedback residual store, ``BatchedExecutor.compress_stacked``)
+        and aggregated in place (``aggregate_stacked``: per-shard partial
+        weighted sums + psum on the client mesh under
+        ``resources.distributed="data"``, a stacked einsum / streaming
+        kernel on one device), so ``aggregated=True`` and the per-client
+        results carry metrics and byte accounting (STC sizes from the
+        in-program per-client nnz) but no ``"update"`` — client updates
+        never gather to the host.
+
+        Anything else falls back — loudly documented here — to the
+        gathering path (per-client update extraction + per-client Python
+        post-train stages): per-client *overrides* of the compression /
+        encryption / upload stages (e.g. ``STCClient``, whose stage
+        override the engine cannot see inside), a non-FedAvg aggregator, a
+        ``Server.aggregation`` override, or an unknown ``compression``
+        name.  Asynchronous dispatch waves also use the in-program
+        compression (residuals keyed by client id across waves) but return
+        their per-client *sent* updates un-aggregated (``aggregated=False``)
+        — the event loop buffers them for staleness-weighted FedBuff
+        aggregation."""
         clients = [self.client(c) for c in selected]
         for stage in ("download", "decompression", "train"):
             impls = {getattr(type(c), stage) for c in clients}
@@ -149,29 +165,62 @@ class Trainer:
                     f"use resources.execution='sequential'")
         global_params = clients[0].decompression(clients[0].download(payload))
 
-        sharded_agg = (
-            self.engine.mesh is not None
-            and self.cfg.client.compression == "none"
+        method = self.cfg.client.compression
+        default_post = all(
+            type(c).compression is Client.compression
+            and type(c).encryption is Client.encryption
+            and type(c).upload is Client.upload for c in clients)
+        is_async = self.cfg.resources.execution == "async"
+        # Synchronous rounds with a non-FedAvg aggregator or a
+        # Server.aggregation override take the gathering fallback even for
+        # built-in compression (the override may inspect the
+        # CompressedTensor leaves the per-client stage produces); async
+        # waves always compress in-program — the event loop has already
+        # validated the server speaks FedBuff (buffered_apply/fedavg).
+        inprogram = is_async and default_post and method in ("stc", "int8")
+        fuse_agg = (
+            not is_async
+            and default_post
+            and method in ("none", "stc", "int8")
             and self.cfg.server.aggregation == "fedavg"
-            and type(self.server).aggregation is Server.aggregation
-            and all(type(c).compression is Client.compression
-                    and type(c).encryption is Client.encryption
-                    and type(c).upload is Client.upload for c in clients))
-        if sharded_agg:
+            and type(self.server).aggregation is Server.aggregation)
+        if fuse_agg:
             st = self.engine.run_cohort_stacked(clients, global_params,
                                                 round_id)
-            delta = self.engine.aggregate_stacked(st)
+            if method != "none":
+                st = self.engine.compress_stacked(
+                    st, clients, method, self.cfg.client.stc_sparsity)
+            delta = self.engine.aggregate_stacked(
+                st, use_kernel=self.cfg.resources.aggregation_kernel)
             self.server.apply_delta(delta)
-            # dense f32 update wire size, identical across the cohort
-            upd_bytes = sum(
-                int(np.prod(l.shape)) * 4
-                for l in jax.tree_util.tree_leaves(global_params))
             results = self.engine.per_client_results(clients, st,
                                                      include_update=False)
-            for client, res in zip(clients, results):
+            if method != "none":
+                payloads = self.engine.per_client_payload_bytes(st)
+            else:
+                # dense f32 update wire size, identical across the cohort
+                upd_bytes = sum(
+                    int(np.prod(l.shape)) * 4
+                    for l in jax.tree_util.tree_leaves(global_params))
+                payloads = [upd_bytes] * len(clients)
+            for client, res, pb in zip(clients, results, payloads):
                 res["client_id"] = client.client_id
-                res["payload_bytes"] = upd_bytes
+                res["payload_bytes"] = pb
             return results, True
+
+        if inprogram:
+            # async wave: compress in-program, hand back per-client sent
+            # (dense-decoded) updates for the FedBuff buffer
+            st = self.engine.run_cohort_stacked(clients, global_params,
+                                                round_id)
+            st = self.engine.compress_stacked(
+                st, clients, method, self.cfg.client.stc_sparsity)
+            results = self.engine.per_client_results(clients, st)
+            payloads = self.engine.per_client_payload_bytes(st)
+            for client, res, pb in zip(clients, results, payloads):
+                res["client_id"] = client.client_id
+                res["payload_bytes"] = pb
+            return results, False
 
         raw = self.engine.run_cohort(clients, global_params, round_id)
         results = []
@@ -205,8 +254,6 @@ class Trainer:
                 cid = res["client_id"]
                 wall_times[cid] = res["train_time"]
                 sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
-                up_bytes += (res["payload_bytes"] if "payload_bytes" in res
-                             else comp.payload_bytes(res["update"]))
         else:
             for group in groups:
                 for cid in group:
@@ -214,8 +261,15 @@ class Trainer:
                     results.append(res)
                     wall_times[cid] = res["train_time"]
                     sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
-                    up_bytes += (res["payload_bytes"] if "payload_bytes" in res
-                                 else comp.payload_bytes(res["update"]))
+        # one batched host sync for the whole cohort's wire accounting
+        # (compression.payload_bytes_many), instead of per-leaf blocking
+        # reads per client
+        up_bytes += sum(r["payload_bytes"] for r in results
+                        if "payload_bytes" in r)
+        missing = [r for r in results if "payload_bytes" not in r]
+        if missing:
+            up_bytes += sum(comp.payload_bytes_many(
+                [r["update"] for r in missing]))
 
         # Eq. 1 makespan under the virtual clock
         round_virtual = max(

@@ -7,6 +7,15 @@ STC changes the compression/decompression stages in *both* directions:
 clients sparsify+ternarize their updates (with error feedback), the server
 sparsifies the distributed global delta.  Train/selection/aggregation are
 untouched — the defining property of a two-stage algorithm in Table VII.
+
+Execution-engine note: because :class:`STCClient` *overrides* the
+compression stage, the batched engine cannot vectorize it and falls back
+to the gathering path (per-client update extraction + per-client Python
+stages).  The equivalent fast-path spelling is the plain built-in config
+``{"client": {"compression": "stc"}}`` — same algorithm, same error
+feedback and wire accounting, but compressed in-program by the batched
+Pallas kernels without ever gathering updates to the host (see
+``repro.core.batched.BatchedExecutor.compress_stacked``).
 """
 from __future__ import annotations
 

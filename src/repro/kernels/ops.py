@@ -49,6 +49,29 @@ def stc_compress(x, keep_frac: float = 0.01, interpret: bool = None):
     return stc_topk.stc_compress(x, keep_frac, interpret=get_interpret(interpret))
 
 
+def stc_compress_batched(x, keep_frac: float = 0.01, interpret: bool = None,
+                         mesh=None):
+    """Stacked-cohort STC: (N, D) -> (sparsified (N, D), nnz (N,)).
+
+    With ``mesh`` (1-D client mesh), each shard compresses its own client
+    rows in place (no gather, no collective)."""
+    itp = get_interpret(interpret)
+    if mesh is not None:
+        return stc_topk.stc_compress_batched_sharded(
+            x, float(keep_frac), mesh, interpret=itp)
+    return stc_topk.stc_compress_batched(x, float(keep_frac), interpret=itp)
+
+
+def int8_roundtrip_batched(x, interpret: bool = None, mesh=None):
+    """Stacked-cohort int8 quantize→dequantize with per-client scales:
+    (N, D) -> (sent (N, D), scale (N,)); sharded per client row under
+    ``mesh``."""
+    itp = get_interpret(interpret)
+    if mesh is not None:
+        return quant.int8_roundtrip_batched_sharded(x, mesh, interpret=itp)
+    return quant.int8_roundtrip_batched(x, interpret=itp)
+
+
 def quantize(x, interpret: bool = None):
     return quant.quantize(x, interpret=get_interpret(interpret))
 

@@ -4,6 +4,20 @@ Per-tile (8, 1024) scale = max|x|/127; quantize and dequantize as separate
 kernels so the quantized representation can cross the (simulated) wire.
 Tile-local scales bound the quantization error per 8K-element block — the
 TPU-native replacement for per-tensor scales on multi-GB updates.
+
+Batched (stacked-cohort) variant for the batched execution engine's
+in-program compression: :func:`int8_roundtrip_batched` takes the stacked
+(N, D) update matrix (one flattened update row per client) and returns the
+quantize→dequantize round trip with one **per-row** scale — the exact
+per-tensor-scale semantics of the sequential compression stage
+(``repro.core.compression.int8_compress_array``), so per-client results
+are bit-identical to the per-client path.  Two chained 2-D-grid kernels
+(client-chunks × D-tiles, like ``fedavg_agg``): a row-max accumulation
+pass (the D-tile axis is the fastest grid dimension and revisits a
+per-chunk (TILE_B, 1) max block) and a fused quantize+dequantize pass.
+Nothing ever gathers to the host; :func:`int8_roundtrip_batched_sharded`
+runs the same kernels per shard of a 1-D client mesh (rows are
+independent — no collective).
 """
 from __future__ import annotations
 
@@ -15,6 +29,8 @@ from jax.experimental import pallas as pl
 
 TILE_R = 8
 TILE_C = 1024
+TILE_SEG = TILE_R * TILE_C      # elements per batched-kernel D-tile
+TILE_B = 8                      # client rows per batched-kernel block
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -80,3 +96,107 @@ def dequantize(q: jnp.ndarray, s: jnp.ndarray, shape, dtype=jnp.float32,
     for d in shape:
         size *= d
     return out.reshape(-1)[:size].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Batched (stacked-cohort) variant: per-row (per-client) scales
+# ---------------------------------------------------------------------------
+
+
+def _rowmax_kernel(x_ref, m_ref):
+    j = pl.program_id(1)               # D-tile index (fastest dim)
+
+    @pl.when(j == 0)
+    def _zero():
+        m_ref[...] = jnp.zeros_like(m_ref)
+
+    ax = jnp.abs(x_ref[...].astype(jnp.float32))    # (TILE_B, tile_d)
+    m_ref[...] = jnp.maximum(m_ref[...], jnp.max(ax, axis=1, keepdims=True))
+
+
+def _qdq_kernel(x_ref, s_ref, o_ref):
+    s = s_ref[...]                                  # (TILE_B, 1) scales
+    q = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / s),
+                 -127.0, 127.0)
+    o_ref[...] = (q * s).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_d"))
+def _int8_roundtrip_padded(x: jnp.ndarray, interpret: bool, tile_d: int):
+    N, D = x.shape                     # pre-padded to the block grid
+    grid = (N // TILE_B, D // tile_d)
+    m = pl.pallas_call(
+        _rowmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_B, tile_d), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((TILE_B, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    # explicit reciprocal multiply: XLA strength-reduces `m / 127.0` to a
+    # 1-ulp-off reciprocal multiply under jit, which would break bitwise
+    # agreement with the eager sequential stage (int8_compress_array)
+    scale = jnp.maximum(m, 1e-12) * jnp.float32(1.0 / 127.0)
+    sent = pl.pallas_call(
+        _qdq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_B, tile_d), lambda i, j: (i, j)),
+            pl.BlockSpec((TILE_B, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B, tile_d), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        interpret=interpret,
+    )(x, scale)
+    return sent, scale
+
+
+def int8_roundtrip_batched(x: jnp.ndarray, interpret: bool = True,
+                           tile_d: int = TILE_SEG):
+    """Quantize→dequantize a stacked (N, D) cohort update with per-row
+    (= per-client per-tensor) scales.
+
+    Returns ``(sent, scale)`` — sent (N, D) f32 round-tripped values
+    (bit-identical to the sequential per-client int8 stage), scale (N,)
+    f32 per-client scales.  Padded rows/columns are zeros: they never win
+    the row max, quantize to 0, and are sliced off before returning.
+    """
+    N, D = x.shape
+    pad_r = (-N) % TILE_B
+    pad_c = (-D) % tile_d
+    xp = x.astype(jnp.float32)
+    if pad_r or pad_c:
+        xp = jnp.pad(xp, ((0, pad_r), (0, pad_c)))
+    sent, scale = _int8_roundtrip_padded(xp, interpret, tile_d)
+    return sent[:N, :D], scale[:N, 0]
+
+
+@functools.lru_cache(maxsize=32)
+def _int8_batched_sharded_program(mesh, axis: str, interpret: bool,
+                                  tile_d: int):
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models.sharding import shard_map
+
+    def body(x_loc):
+        return int8_roundtrip_batched(x_loc, interpret, tile_d)
+
+    return jax.jit(shard_map(body, mesh, in_specs=(P(axis, None),),
+                             out_specs=(P(axis, None), P(axis))))
+
+
+def int8_roundtrip_batched_sharded(x: jnp.ndarray, mesh,
+                                   axis: str = "clients",
+                                   interpret: bool = True,
+                                   tile_d: int = TILE_SEG):
+    """Mesh-sharded :func:`int8_roundtrip_batched` (per-shard rows, no
+    collective).  N must be divisible by ``mesh.size``."""
+    if len(mesh.axis_names) != 1 or mesh.axis_names[0] != axis:
+        raise ValueError(
+            f"int8_roundtrip_batched_sharded needs a 1-D mesh with axis "
+            f"{axis!r}, got axes {mesh.axis_names}")
+    if x.shape[0] % mesh.size:
+        raise ValueError(
+            f"client dim {x.shape[0]} must be divisible by the mesh size "
+            f"{mesh.size}")
+    return _int8_batched_sharded_program(mesh, axis, interpret, tile_d)(x)

@@ -16,10 +16,12 @@ def fedavg_ref(updates: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
                       updates.astype(jnp.float32))
 
 
-def _stc_tile_ref(x, keep_frac):
+def _stc_tile_ref(x, keep_frac, real):
+    """One threshold tile; ``real`` is the tile's unpadded element count
+    (f32), matching the kernel's real-count target."""
     ax = jnp.abs(x.astype(jnp.float32))
-    n = x.size
-    target = jnp.asarray(max(int(round(keep_frac * n)), 1), jnp.float32)
+    target = jnp.maximum(jnp.round(jnp.float32(keep_frac)
+                                   * real.astype(jnp.float32)), 1.0)
 
     def body(_, lohi):
         lo, hi = lohi
@@ -43,13 +45,33 @@ def stc_ref(x: jnp.ndarray, keep_frac: float = 0.01) -> jnp.ndarray:
     """Tile-local STC, bit-matching the kernel's per-tile bisection."""
     shape = x.shape
     flat = x.reshape(-1)
+    n = flat.size
     tile = STC_R * STC_C
     pad = (-flat.size) % tile
     if pad:
         flat = jnp.pad(flat, (0, pad))
     tiles = flat.reshape(-1, STC_R, STC_C)
-    out = jax.vmap(lambda t: _stc_tile_ref(t, keep_frac))(tiles)
+    reals = jnp.clip(n - jnp.arange(tiles.shape[0]) * tile, 0, tile)
+    out = jax.vmap(lambda t, r: _stc_tile_ref(t, keep_frac, r))(tiles, reals)
     return out.reshape(-1)[: flat.size - pad].reshape(shape).astype(x.dtype)
+
+
+def stc_batched_ref(x: jnp.ndarray, keep_frac: float = 0.01):
+    """Row-wise (per-client) tile-local STC on an (N, D) matrix + per-row
+    nnz — oracle for ``stc_topk.stc_compress_batched``."""
+    out = jax.vmap(lambda row: stc_ref(row, keep_frac))(x)
+    return out, jnp.sum((out != 0).astype(jnp.float32), axis=1)
+
+
+def int8_roundtrip_batched_ref(x: jnp.ndarray):
+    """Row-wise per-tensor-scale int8 round trip on an (N, D) matrix —
+    oracle for ``quant.int8_roundtrip_batched`` (and bit-identical to the
+    sequential compression stage's ``int8_compress_array`` per row)."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf), axis=1),
+                        1e-12) * jnp.float32(1.0 / 127.0)
+    q = jnp.clip(jnp.round(xf / scale[:, None]), -127, 127)
+    return q * scale[:, None], scale
 
 
 def quantize_ref(x: jnp.ndarray):

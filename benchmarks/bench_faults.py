@@ -1,0 +1,98 @@
+"""Fault-injection overhead and degraded-round throughput numbers.
+
+Measures, per cohort size N ∈ {10, 50, 100}:
+
+* batched round wall time with the fault layer **configured but inactive**
+  (all probabilities zero — the PR 6 zero-overhead contract: faults off
+  must ride the exact PR 1-5 fast path, so ``scripts/check_bench.py``
+  gates ``faults_off_batched`` against the plain ``batched`` number at
+  N >= 50);
+* batched round wall time and surviving-client throughput under client
+  dropout at rates ∈ {0.1, 0.3, 0.5} — the degradation path zero-weights
+  the failed rows of the same stacked program, so the round time must stay
+  flat while survivors shrink (reported, not gated: absolute survivor
+  counts are seeded-RNG noise at small N).
+
+``collect()`` feeds ``benchmarks/run.py --json`` regression mode.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable
+
+import jax
+
+from benchmarks.common import emit
+
+NS = (10, 50, 100)
+DROPOUT_RATES = (0.1, 0.3, 0.5)
+
+
+def _make_trainer(n: int, faults: Dict | None = None):
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.core.server import Server
+    from repro.data.fed_data import build_federated_data
+    from repro.models.registry import get_model
+
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": n, "batch_size": 32},
+        "server": {"rounds": 2, "clients_per_round": n, "test_every": 0},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "resources": {"execution": "batched"},
+        "faults": faults or {},
+        "tracking": {"enabled": False},
+    })
+    model = get_model(cfg.model)
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(cfg.seed))
+    return trainer
+
+
+def _round_time(n: int, faults: Dict | None = None):
+    trainer = _make_trainer(n, faults=faults)
+    trainer.run_round(0)                      # warm-up (compile)
+    t0 = time.perf_counter()
+    trainer.run_round(1)
+    dt = time.perf_counter() - t0
+    return dt, trainer.history[1]
+
+
+def collect(ns: Iterable[int] = NS,
+            rates: Iterable[float] = DROPOUT_RATES) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {"faults_off_batched": {}, "faults_dropout": {}}
+    for n in ns:
+        off, _ = _round_time(n, faults={})    # explicit-but-inactive config
+        out["faults_off_batched"][str(n)] = off
+        per_rate: Dict[str, Dict] = {}
+        for rate in rates:
+            dt, metrics = _round_time(
+                n, faults={"dropout_prob": rate, "min_clients_per_round": 1})
+            per_rate[str(rate)] = {
+                "round_s": dt,
+                "survivors": metrics["survivors"],
+                "survivors_per_s": metrics["survivors"] / dt if dt else 0.0,
+            }
+        out["faults_dropout"][str(n)] = per_rate
+    return out
+
+
+def main() -> None:
+    data = collect()
+    rows = []
+    for n in sorted(data["faults_off_batched"], key=int):
+        rows.append((f"faults_off_batched_roundtime_s_N{n}",
+                     data["faults_off_batched"][n],
+                     "must match plain batched (zero-overhead gate)"))
+        for rate, d in sorted(data["faults_dropout"][n].items(),
+                              key=lambda kv: float(kv[0])):
+            rows.append((f"dropout{rate}_roundtime_s_N{n}", d["round_s"],
+                         f"{d['survivors']} survivors, "
+                         f"{d['survivors_per_s']:.1f} clients/s"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -33,6 +33,8 @@ BENCHES = [
      "Mesh-sharded cohort (resources.distributed) per-shard round times"),
     ("async", "benchmarks.bench_async",
      "Async FedBuff event loop vs synchronous rounds (simulated wall-clock)"),
+    ("faults", "benchmarks.bench_faults",
+     "Fault injection: zero-overhead when off, degraded-round throughput"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline table from dry-run"),
 ]
 
@@ -41,9 +43,10 @@ def run_json(path: str) -> None:
     """Regression mode: emit sequential/batched round-time, aggregation,
     and compressed in-program-vs-gathering round numbers as JSON
     (consumed by scripts/check_bench.py)."""
-    from benchmarks import bench_batched, bench_compression
+    from benchmarks import bench_batched, bench_compression, bench_faults
     data = bench_batched.collect()
     data.update(bench_compression.collect_rounds())
+    data.update(bench_faults.collect())
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"# wrote {path}")

@@ -8,8 +8,11 @@ Benchmark mode (batched execution engine):
 Fails (exit 1) if batched round time is not faster than sequential at any
 cohort size N >= 50 — the scaling regime the engine exists for — or if a
 compressed (STC) round through the in-program no-gather pipeline is not
-faster than the gathering path at N >= 50.  Small cohorts are reported but
-not gated (dispatch overhead there is noise-level).
+faster than the gathering path at N >= 50, or if a batched round with the
+fault layer configured but inactive is more than ``FAULTS_OFF_NOISE``
+slower than the plain batched round (zero-overhead contract).  Small
+cohorts are reported but not gated (dispatch overhead there is
+noise-level).
 
 Test-baseline mode ("no worse than seed", mechanically):
 
@@ -33,6 +36,9 @@ import subprocess
 import sys
 
 GATE_MIN_N = 50
+# faults-off batched round may be at most this much slower than the plain
+# batched round (zero-overhead contract; headroom is timing noise only)
+FAULTS_OFF_NOISE = 1.25
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "test_baseline.json")
@@ -135,6 +141,24 @@ def check(data: dict) -> int:
         print(f"compressed N={n}: gathering={gather:.4f}s "
               f"in-program={fast:.4f}s ({speedup:.1f}x) [{status}]")
         if gated and fast >= gather:
+            failures += 1
+    # fault layer zero-overhead: with all probabilities zero the batched
+    # round must ride the exact PR 1-5 fast path, so its time must match
+    # the plain batched number within timing noise at gated cohort sizes
+    for n in sorted(data.get("faults_off_batched", {}), key=int):
+        off = data["faults_off_batched"][n]
+        base = data.get("batched", {}).get(n)
+        if base is None:
+            print(f"faults-off N={n}: missing plain batched number")
+            failures += 1
+            continue
+        ratio = off / base if base else float("inf")
+        gated = int(n) >= GATE_MIN_N
+        ok = off <= base * FAULTS_OFF_NOISE
+        status = "ok" if ok else ("FAIL" if gated else "warn")
+        print(f"faults-off N={n}: batched={base:.4f}s "
+              f"faults_off={off:.4f}s ({ratio:.2f}x) [{status}]")
+        if gated and not ok:
             failures += 1
     return failures
 

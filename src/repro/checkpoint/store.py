@@ -16,6 +16,7 @@ def _path(ckpt_dir: str, step: int) -> str:
 def save_checkpoint(ckpt_dir: str, tree: Any, step: int,
                     keep: int = 3) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
+    _sweep_tmp(ckpt_dir)
     data = serialize.dumps(tree)
     fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
     with os.fdopen(fd, "wb") as f:
@@ -26,6 +27,19 @@ def save_checkpoint(ckpt_dir: str, tree: Any, step: int,
     return final
 
 
+def _sweep_tmp(ckpt_dir: str) -> None:
+    """Remove stale ``*.tmp`` files from saves killed before their atomic
+    rename; without this they accumulate in ``ckpt_dir`` forever.  Only
+    run from ``save_checkpoint`` (single-writer discipline), so no live
+    temp file can be swept."""
+    for fn in os.listdir(ckpt_dir):
+        if fn.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(ckpt_dir, fn))
+            except OSError:
+                pass               # concurrent sweep/replace already won
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     if not os.path.isdir(ckpt_dir):
         return None
@@ -34,12 +48,25 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def available_steps(ckpt_dir: str) -> list:
+    """Sorted step numbers of every checkpoint in ``ckpt_dir``."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(m.group(1)) for fn in os.listdir(ckpt_dir)
+                  if (m := re.match(r"ckpt_(\d+)\.msgpack$", fn)))
+
+
 def load_checkpoint(ckpt_dir: str, step: Optional[int] = None) -> Any:
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    with open(_path(ckpt_dir, step), "rb") as f:
+    path = _path(ckpt_dir, step)
+    if not os.path.exists(path):
+        raise FileNotFoundError(
+            f"no checkpoint for step {step} in {ckpt_dir}; available "
+            f"steps: {available_steps(ckpt_dir) or 'none'}")
+    with open(path, "rb") as f:
         return serialize.loads(f.read())
 
 

@@ -64,8 +64,14 @@ from repro.core import compression as comp
 from repro.core.aggregation import (
     staleness_weighted_delta, weighted_train_loss,
 )
+from repro.core.rounds import _poison_update, update_is_valid
 
 __all__ = ["AsyncEngine", "InFlight"]
+
+#: fault-accounting counters carried in the event-loop state and flushed
+#: into each aggregation's metrics (cfg.faults — docs/faults.md)
+FAULT_COUNTERS = ("dropped", "crashed", "straggled", "deadline_missed",
+                  "rejected", "retried", "gave_up")
 
 
 @dataclass(order=True)
@@ -75,7 +81,13 @@ class InFlight:
     Heap-ordered by ``(finish_time, seq)`` — ``seq`` is the global dispatch
     counter, so simultaneous completions pop in dispatch order and the
     degenerate uniform-speed case reproduces the synchronous cohort order
-    bit-for-bit."""
+    bit-for-bit.
+
+    ``kind`` distinguishes event types under fault injection: ``"done"``
+    (a completion), ``"fail:dropped"`` / ``"fail:crashed"`` /
+    ``"fail:deadline"`` (a non-completion, detected at ``finish_time``),
+    and ``"retry"`` (a pure wake-up marking a failed client's backoff
+    cooldown expiry so ``_dispatch`` runs then)."""
 
     finish_time: float
     seq: int
@@ -83,6 +95,7 @@ class InFlight:
     dispatch_time: float = field(compare=False)
     version: int = field(compare=False)          # model version trained on
     result: Dict[str, Any] = field(compare=False)
+    kind: str = field(compare=False, default="done")
 
 
 class AsyncEngine:
@@ -90,9 +103,15 @@ class AsyncEngine:
 
     Constructed from a :class:`repro.core.rounds.Trainer` (which owns the
     server, the :class:`repro.core.batched.BatchedExecutor`, the
-    heterogeneity simulator and the tracker); :meth:`run` executes
-    ``cfg.server.rounds`` buffer aggregations and returns one metrics dict
-    per aggregation (appended to ``Trainer.history`` by the caller).
+    heterogeneity simulator and the tracker); :meth:`run` executes the
+    remaining ``cfg.server.rounds - len(trainer.history)`` buffer
+    aggregations, appending each metrics dict to ``Trainer.history``
+    itself (so periodic checkpoints observe them) and returning the list
+    of new entries.  Starting the budget from ``len(history)`` is what
+    makes :meth:`Trainer.resume` work for the async engine: the invariant
+    ``version == completed aggregations == len(history)`` holds across a
+    kill/restore (in-flight work at the kill is lost and re-dispatched —
+    async resume is value-correct, not bit-identical; see docs/faults.md).
     """
 
     def __init__(self, trainer):
@@ -108,7 +127,15 @@ class AsyncEngine:
         self.max_concurrency = (res.max_concurrency
                                 or self.cfg.server.clients_per_round)
         self.staleness_power = res.staleness_power
-        self.version = 0                 # global model version (aggregations)
+        # resume support: history already holds completed aggregations
+        self.completed0 = len(trainer.history)
+        self.version = self.completed0   # global model version (aggregations)
+        self.target = max(self.cfg.server.rounds - self.completed0, 0)
+        self.faults = trainer.faults
+        # fault accounting is active if anything can fail a dispatch
+        self._faulty = (self.cfg.faults.active
+                        or self.cfg.resources.round_deadline > 0)
+        self._guard = self.cfg.faults.active
         self._per_step_cost = None       # running-min wall/steps over waves
         # The event loop aggregates itself (staleness-weighted FedBuff);
         # it never calls Server.aggregation.  Refuse loudly rather than
@@ -142,23 +169,26 @@ class AsyncEngine:
         idle clients is exhausted."""
         server, trainer = self.server, self.trainer
         heap, in_flight = state["heap"], state["in_flight"]
+        f = self.cfg.faults
+        deadline = self.cfg.resources.round_deadline
         event_cost = self._per_step_cost   # one cost per event: waves tie
         while True:
             free = self.max_concurrency - len(in_flight)
             budget = (state["total_needed"] - state["completed"]
                       - len(in_flight))
-            avail = [c for c in state["all_ids"] if c not in in_flight]
+            avail = [c for c in state["all_ids"] if c not in in_flight
+                     and state["cooldown"].get(c, 0.0) <= now]
             m = min(free, budget, len(avail))
             if m <= 0:
                 return
-            selected = server.selection(avail, state["wave_id"])[:m]
+            wave = state["wave_id"]
+            selected = server.selection(avail, wave)[:m]
             if not selected:
                 return
             payload = server.distribution(selected)
             state["down_bytes"] += (payload.get("payload_bytes", 0)
                                     * len(selected))
-            results, _ = trainer._run_batched(selected, payload,
-                                              state["wave_id"])
+            results, _ = trainer._run_batched(selected, payload, wave)
             state["wave_id"] += 1
             wall = sum(r["train_time"] for r in results)
             steps = sum(r["metrics"]["batches"] for r in results)
@@ -177,15 +207,75 @@ class AsyncEngine:
                     r["payload_bytes"] = pb
             for res in results:
                 cid = res["client_id"]
+                plan = self.faults.plan(cid, wave) if f.active else None
                 base = res["metrics"]["batches"] * event_cost
+                if plan is not None and plan.straggler:
+                    base *= f.straggler_slowdown
+                    state["straggled"] += 1
                 duration = self.het.simulate_time(cid, base)
-                state["up_bytes"] += res["payload_bytes"]
+                kind, finish = "done", now + duration
+                if plan is not None and plan.dropout:
+                    # never responds; detected at the response deadline
+                    # when one is set, else when the reply was due
+                    kind = "fail:dropped"
+                    state["dropped"] += 1
+                    if deadline > 0:
+                        finish = now + min(duration, deadline)
+                elif plan is not None and plan.crash:
+                    kind = "fail:crashed"
+                    state["crashed"] += 1
+                    finish = now + duration * plan.crash_fraction
+                elif deadline > 0 and duration > deadline:
+                    # the reply would land after the server stops waiting
+                    kind = "fail:deadline"
+                    state["deadline_missed"] += 1
+                    finish = now + deadline
+                elif plan is not None and plan.nan_update:
+                    res["update"] = _poison_update(res["update"])
+                if kind == "done":
+                    state["up_bytes"] += res["payload_bytes"]
                 heapq.heappush(heap, InFlight(
-                    finish_time=now + duration, seq=state["seq"],
+                    finish_time=finish, seq=state["seq"],
                     client_id=cid, dispatch_time=now,
-                    version=self.version, result=res))
+                    version=self.version, result=res, kind=kind))
                 state["seq"] += 1
                 in_flight.add(cid)
+
+    # ------------------------------------------------------------------
+    def _note_failure(self, e: InFlight, now: float,
+                      state: Dict[str, Any]) -> None:
+        """Bounded retry with exponential backoff after a failed dispatch.
+
+        The failed client enters a cooldown of ``retry_backoff *
+        2**(attempt-1)`` virtual seconds; a ``"retry"`` wake-up event at
+        cooldown expiry keeps the heap non-empty so ``_dispatch`` runs
+        then (the client is excluded from ``avail`` until that moment).
+        After ``max_retries`` failed attempts the server gives up on this
+        episode — the attempt counter resets so a later selection starts
+        fresh rather than being permanently banned."""
+        f = self.cfg.faults
+        state["failures"] += 1
+        if state["failures"] > state["failure_cap"]:
+            raise ValueError(
+                f"async fault injection: {state['failures']} failed "
+                f"dispatches against {state['completed']} completions — "
+                f"failure rates this high cannot make progress; lower "
+                f"faults.dropout_prob/crash_prob/nan_update_prob or raise "
+                f"resources.round_deadline")
+        attempt = state["attempts"].get(e.client_id, 0) + 1
+        state["attempts"][e.client_id] = attempt
+        if attempt <= f.max_retries:
+            delay = f.retry_backoff * (2 ** (attempt - 1))
+            state["cooldown"][e.client_id] = now + delay
+            state["retried"] += 1
+            heapq.heappush(state["heap"], InFlight(
+                finish_time=now + delay, seq=state["seq"],
+                client_id=e.client_id, dispatch_time=now,
+                version=self.version, result={}, kind="retry"))
+            state["seq"] += 1
+        else:
+            state["attempts"][e.client_id] = 0
+            state["gave_up"] += 1
 
     # ------------------------------------------------------------------
     def _aggregate(self, batch: List[InFlight], now: float,
@@ -227,6 +317,12 @@ class AsyncEngine:
         state["last_agg_time"] = now
         state["down_bytes"] = 0
         state["up_bytes"] = 0
+        if self._faulty:
+            # flush the per-window fault counters into this aggregation's
+            # metrics (faults off: no extra keys — history stays identical)
+            for k in FAULT_COUNTERS:
+                metrics[k] = state[k]
+                state[k] = 0
         if self.cfg.server.test_every and \
            (agg_id + 1) % self.cfg.server.test_every == 0:
             metrics.update(self.server.test())
@@ -244,29 +340,48 @@ class AsyncEngine:
         return metrics
 
     # ------------------------------------------------------------------
+    def _finish_round(self, metrics: Dict[str, float],
+                      history: List[Dict[str, float]]) -> None:
+        """Record one aggregation: engine-local history, Trainer.history
+        (so periodic checkpoints see it), and the checkpoint hook —
+        ``self.version`` equals completed aggregations after
+        ``_aggregate``, matching the synchronous round counter."""
+        history.append(metrics)
+        self.trainer.history.append(metrics)
+        self.trainer._maybe_checkpoint(self.version)
+
+    # ------------------------------------------------------------------
     def run(self) -> List[Dict[str, float]]:
-        """Run ``cfg.server.rounds`` buffer aggregations; returns history.
+        """Run the remaining buffer aggregations; returns the new entries.
 
         The completion budget is sized so the loop drains exactly —
-        ``rounds * K`` completions are dispatched in total and no trained
-        update is discarded.  If the client pool is too small to ever fill
-        a buffer (loop starves), the partial buffer is flushed at the end,
-        mirroring ``Server.finalize`` semantics."""
+        ``target * K`` successful completions are dispatched in total and
+        no trained update is discarded.  If the client pool is too small
+        to ever fill a buffer (loop starves), the partial buffer is
+        flushed at the end, mirroring ``Server.finalize`` semantics.
+        Failed dispatches (dropout/crash/deadline/guard-rejected) are
+        non-completions: their slot frees on detection and the budget
+        re-expands, so replacements dispatch until the target is met or
+        the failure cap trips."""
+        target = self.target
         state: Dict[str, Any] = {
             "heap": [], "in_flight": set(),
             "all_ids": list(self.trainer.fed_data.client_ids),
             "seq": 0, "wave_id": 0, "completed": 0,
-            "total_needed": self.cfg.server.rounds * self.K,
+            "total_needed": target * self.K,
             "down_bytes": 0, "up_bytes": 0,
             "last_agg_time": 0.0, "t_wall": time.perf_counter(),
+            "cooldown": {}, "attempts": {}, "failures": 0,
+            "failure_cap": 100 + 10 * max(target * self.K, 1),
         }
+        state.update({k: 0 for k in FAULT_COUNTERS})
         heap = state["heap"]
         buffer: List[InFlight] = []
         history: List[Dict[str, float]] = []
         now = 0.0
 
         self._dispatch(0.0, state)
-        while len(history) < self.cfg.server.rounds and heap:
+        while len(history) < target and heap:
             # pop the earliest completion plus every tie (simultaneous
             # finishes — the whole wave in the uniform-speed case) so
             # aggregation happens before their replacements dispatch
@@ -277,13 +392,28 @@ class AsyncEngine:
             now = entry.finish_time
             for e in ties:
                 state["in_flight"].discard(e.client_id)
+                if e.kind == "retry":
+                    continue   # cooldown expiry wake-up; dispatch below
+                if e.kind != "done":
+                    self._note_failure(e, now, state)
+                    continue
+                if self._guard and not update_is_valid(
+                        e.result["update"], self.cfg.faults.max_update_norm):
+                    # corrupted upload: reject before it can touch the
+                    # buffer (a buffered copy plus a re-dispatch would
+                    # double-count the client —
+                    # FedBuffServer.buffered_client_ids keeps this honest)
+                    state["rejected"] += 1
+                    self._note_failure(e, now, state)
+                    continue
+                state["attempts"].pop(e.client_id, None)
                 state["completed"] += 1
                 buffer.append(e)
-            while len(buffer) >= self.K and \
-                    len(history) < self.cfg.server.rounds:
+            while len(buffer) >= self.K and len(history) < target:
                 batch, buffer = buffer[: self.K], buffer[self.K:]
-                history.append(self._aggregate(batch, now, state))
+                self._finish_round(self._aggregate(batch, now, state),
+                                   history)
             self._dispatch(now, state)
-        if buffer and len(history) < self.cfg.server.rounds:
-            history.append(self._aggregate(buffer, now, state))
+        if buffer and len(history) < target:
+            self._finish_round(self._aggregate(buffer, now, state), history)
         return history

@@ -642,6 +642,27 @@ class BatchedExecutor:
         return [m[rows] for m in self._ef_store], rows
 
     # ------------------------------------------------------------------
+    def ef_state(self) -> Dict[str, Any]:
+        """Serializable snapshot of the error-feedback residual store
+        (checkpointing — ``Trainer.save_checkpoint``).  Host np copies;
+        the row map keys compression continuity per client id across a
+        kill/resume boundary."""
+        return {"rows": dict(self._ef_rows),
+                "store": [np.asarray(m) for m in self._ef_store]}
+
+    def load_ef_state(self, state: Dict[str, Any]) -> None:
+        """Restore :meth:`ef_state` (re-sharding onto the client mesh)."""
+        self._ef_rows = {str(k): int(v) for k, v in state["rows"].items()}
+        store = [jnp.asarray(np.asarray(m, np.float32))
+                 for m in state["store"]]
+        if self.mesh is not None and store:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sh = NamedSharding(self.mesh, P(CLIENT_AXIS, None))
+            store = [jax.device_put(m, sh) for m in store]
+        self._ef_store = store
+
+    # ------------------------------------------------------------------
     def compress_stacked(self, st: Dict[str, Any], clients: Sequence,
                          method: str, stc_sparsity: float = 0.01,
                          interpret: Optional[bool] = None) -> Dict[str, Any]:
@@ -748,7 +769,10 @@ class BatchedExecutor:
     # ------------------------------------------------------------------
     def aggregate_stacked(self, st: Dict[str, Any],
                           interpret: Optional[bool] = None,
-                          use_kernel: bool = False) -> PyTree:
+                          use_kernel: bool = False,
+                          mask: Optional[np.ndarray] = None,
+                          guard: bool = False,
+                          max_update_norm: float = 0.0) -> PyTree:
         """FedAvg delta from stacked updates without per-client gathering.
 
         Flattens the stacked update pytree to (N_bucket, D) and reduces it
@@ -761,7 +785,19 @@ class BatchedExecutor:
         happens upstream of the weighted sum, and staleness/weight folding
         is untouched.  Returns the weighted-average (f32) delta as a
         pytree shaped like the global params (the updates mirror their
-        structure)."""
+        structure).
+
+        Fault tolerance (``cfg.faults`` — see docs/faults.md): ``mask``
+        zero-weights failed / deadline-exceeded clients ((N,) 0/1 host
+        array), ``guard`` adds the on-device NaN/Inf row check on the
+        stacked matrix (plus a global-L2 ``max_update_norm`` outlier bound
+        when > 0), and the surviving weights renormalize to sum 1 — the
+        survivors-only FedAvg.  Guarded rows are zeroed in the data before
+        the weighted sum (0-weighting alone would still propagate NaN) and
+        the per-client verdict lands in ``st["guard_ok"]`` (device (N_b,)
+        bool) for fault accounting.  All of this is skipped — the weight
+        vector and program are byte-identical to a fault-free build — when
+        ``mask``/``guard`` are left at their defaults."""
         from repro.core.aggregation import fedavg_weights
         from repro.kernels import ops as kops
         from repro.kernels.fedavg_agg import fedavg_aggregate_sharded
@@ -772,6 +808,30 @@ class BatchedExecutor:
         w = np.zeros((nb,), np.float32)
         w[: len(num_samples)] = fedavg_weights(num_samples)
         flat = jnp.concatenate([l.reshape(nb, -1) for l in leaves], axis=1)
+        if mask is not None or guard:
+            wj = jnp.asarray(w)
+            if mask is not None:
+                m = np.zeros((nb,), np.float32)
+                m[: len(mask)] = np.asarray(mask, np.float32)
+                wj = wj * jnp.asarray(m)
+            if guard:
+                ok = jnp.isfinite(flat).all(axis=1)
+                if max_update_norm > 0:
+                    norms = jnp.sqrt(jnp.sum(
+                        jnp.square(flat.astype(jnp.float32)), axis=1))
+                    # non-finite norms compare False, so the & is redundant
+                    # only for finite rows — keep both checks explicit
+                    ok = ok & (norms <= max_update_norm)
+                wj = wj * ok.astype(jnp.float32)
+                # zero rejected rows in the DATA too: 0 * NaN is NaN, so a
+                # zero weight alone cannot neutralize a poisoned update
+                flat = jnp.where(ok[:, None], flat, 0.0)
+                st["guard_ok"] = ok
+            wsum = jnp.sum(wj)
+            # survivors-only FedAvg; all-failed rounds yield a zero delta
+            # (params unchanged) instead of a 0/0 NaN
+            wj = jnp.where(wsum > 0, wj / wsum, 0.0)
+            w = wj
         if self.mesh is not None:
             delta = fedavg_aggregate_sharded(
                 flat, jnp.asarray(w), self.mesh,

@@ -236,6 +236,104 @@ def validate_hyperparam_choices(choices) -> None:
 
 
 @dataclass(frozen=True)
+class FaultConfig:
+    """Seeded client-failure injection (FLGo-style unreliability, §V-A).
+
+    All probabilities are sampled **deterministically per (client, round)**
+    by ``repro.simulation.heterogeneity.FaultInjector`` — an FNV-1a hash of
+    the coordinate seeds an ``np.random.RandomState`` — so a faulty
+    federation replays identically across runs, processes, and
+    checkpoint/resume boundaries.  Any non-zero knob activates the fault
+    layer (``active``); with every knob at its default the engines are
+    byte-identical to a fault-free build (no weight-vector recompute, no
+    extra host syncs — gated by ``scripts/check_bench.py``)."""
+
+    dropout_prob: float = 0.0         # client never responds this round
+    crash_prob: float = 0.0           # client dies mid-training (partial
+    #                                   virtual time elapses, no update)
+    straggler_prob: float = 0.0       # client is slowed this round ...
+    straggler_slowdown: float = 4.0   # ... by this factor (>= 1)
+    nan_update_prob: float = 0.0      # client uploads a corrupted (NaN)
+    #                                   update; the server-side guard
+    #                                   rejects it by zero-weighting
+    max_update_norm: float = 0.0      # norm-outlier guard on each update's
+    #                                   global L2 norm (0 = off)
+    min_clients_per_round: int = 1    # survivor floor: re-select the cohort
+    #                                   (bounded attempts) instead of
+    #                                   silently aggregating a tiny one
+    max_retries: int = 2              # async: bounded retries per failure
+    retry_backoff: float = 1.0        # async: virtual-seconds backoff base,
+    #                                   doubled per attempt
+    seed: int = 0
+
+    @property
+    def active(self) -> bool:
+        """True when any injection or guard knob is non-default."""
+        return (self.dropout_prob > 0 or self.crash_prob > 0
+                or self.straggler_prob > 0 or self.nan_update_prob > 0
+                or self.max_update_norm > 0)
+
+
+def validate_fault_config(cfg: "FaultConfig") -> None:
+    """Reject out-of-range fault knobs loudly at ``Trainer`` construction."""
+    for name in ("dropout_prob", "crash_prob", "straggler_prob",
+                 "nan_update_prob"):
+        v = getattr(cfg, name)
+        if not _finite(v) or not 0.0 <= float(v) <= 1.0:
+            raise ValueError(
+                f"faults.{name}={v!r} is invalid; expected a probability "
+                f"in [0, 1]")
+    if not _finite(cfg.straggler_slowdown) or cfg.straggler_slowdown < 1.0:
+        raise ValueError(
+            f"faults.straggler_slowdown={cfg.straggler_slowdown!r} is "
+            f"invalid; expected a finite factor >= 1")
+    if not _finite(cfg.max_update_norm) or cfg.max_update_norm < 0:
+        raise ValueError(
+            f"faults.max_update_norm={cfg.max_update_norm!r} is invalid; "
+            f"expected a finite float >= 0 (0 disables the norm guard)")
+    if not isinstance(cfg.min_clients_per_round, int) \
+            or cfg.min_clients_per_round < 0:
+        raise ValueError(
+            f"faults.min_clients_per_round={cfg.min_clients_per_round!r} "
+            f"is invalid; expected an int >= 0")
+    if not isinstance(cfg.max_retries, int) or cfg.max_retries < 0:
+        raise ValueError(
+            f"faults.max_retries={cfg.max_retries!r} is invalid; expected "
+            f"an int >= 0")
+    if not _finite(cfg.retry_backoff) or cfg.retry_backoff < 0:
+        raise ValueError(
+            f"faults.retry_backoff={cfg.retry_backoff!r} is invalid; "
+            f"expected a finite float >= 0")
+
+
+@dataclass(frozen=True)
+class CheckpointConfig:
+    """Periodic atomic checkpoints of the full trainer state
+    (``repro.checkpoint.store``): server params, round index, selection
+    RNG, heterogeneity speed assignments, error-feedback residuals and any
+    FedBuff buffer — everything ``Trainer.resume()`` needs to continue
+    bit-identically (synchronous engines) after a kill."""
+
+    every: int = 0                    # checkpoint every N rounds (async:
+    #                                   every N buffer aggregations); 0 = off
+    dir: str = "artifacts/checkpoints"
+    keep: int = 3                     # retained checkpoints (0 = keep all)
+
+
+def validate_checkpoint_config(cfg: "CheckpointConfig") -> None:
+    if not isinstance(cfg.every, int) or cfg.every < 0:
+        raise ValueError(
+            f"checkpoint.every={cfg.every!r} is invalid; expected an int "
+            f">= 0 (0 disables checkpointing)")
+    if not isinstance(cfg.keep, int) or cfg.keep < 0:
+        raise ValueError(
+            f"checkpoint.keep={cfg.keep!r} is invalid; expected an int "
+            f">= 0 (0 keeps every checkpoint)")
+    if not cfg.dir:
+        raise ValueError("checkpoint.dir must be a non-empty path")
+
+
+@dataclass(frozen=True)
 class SystemHeterogeneityConfig:
     """Lightweight system-heterogeneity simulation (paper §V-A)."""
 
@@ -318,6 +416,12 @@ class ResourceConfig:
     max_concurrency: int = 0          # concurrent in-flight clients
     #                                   (0 -> server.clients_per_round)
     staleness_power: float = 0.5      # a in w ∝ 1/(1+staleness)^a (0 = off)
+    # Virtual-seconds deadline the server waits for each client's response
+    # (0 = wait forever).  Responses slower than the deadline are
+    # zero-weighted out of the aggregate (synchronous engines) or treated
+    # as failed dispatches (async); the round's virtual makespan is capped
+    # at the deadline.  See docs/faults.md.
+    round_deadline: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -342,6 +446,8 @@ class Config:
     )
     resources: ResourceConfig = field(default_factory=ResourceConfig)
     tracking: TrackingConfig = field(default_factory=TrackingConfig)
+    faults: FaultConfig = field(default_factory=FaultConfig)
+    checkpoint: CheckpointConfig = field(default_factory=CheckpointConfig)
 
     @staticmethod
     def make(overrides: Optional[Mapping[str, Any]] = None) -> "Config":
@@ -550,6 +656,8 @@ _TYPE_REGISTRY = {
     "SystemHeterogeneityConfig": SystemHeterogeneityConfig,
     "ResourceConfig": ResourceConfig,
     "TrackingConfig": TrackingConfig,
+    "FaultConfig": FaultConfig,
+    "CheckpointConfig": CheckpointConfig,
     "MoEConfig": MoEConfig,
     "MLAConfig": MLAConfig,
 }

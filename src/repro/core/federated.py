@@ -47,6 +47,11 @@ class FedRoundConfig:
     compression: str = "none"
     stc_sparsity: float = 0.01
     server_lr: float = 1.0
+    # zero-weight pods whose round delta contains NaN/Inf during the
+    # cross-pod sync (survivors-only FedAvg at pod granularity, mirroring
+    # the simulation engines' update guard); off by default — the guard
+    # adds one finiteness reduction per leaf to the jitted round
+    skip_nonfinite: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +86,30 @@ def init_fed_state(state: TrainState, num_pods: int,
         residual = jax.tree_util.tree_map(
             lambda x: jnp.zeros_like(x, jnp.float32), state.params)
     return FedState(pod_state, residual)
+
+
+def finite_pod_mean(delta: Any) -> Any:
+    """Mean over the leading pod axis, zero-weighting non-finite pods.
+
+    A pod is invalid when ANY leaf of its round delta contains NaN/Inf (a
+    diverged or corrupted silo); the sync then averages the surviving pods
+    only — weights renormalize over survivors, and the all-invalid edge
+    case degrades to a zero delta (params unchanged) instead of poisoning
+    every pod through the collective.  Bad rows are zeroed with ``where``
+    before the sum because ``0 * nan == nan``."""
+    leaves = jax.tree_util.tree_leaves(delta)
+    ok = None
+    for d in leaves:
+        leaf_ok = jnp.isfinite(d.reshape(d.shape[0], -1)).all(axis=1)
+        ok = leaf_ok if ok is None else ok & leaf_ok
+    w = ok.astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+
+    def one(d):
+        wr = w.reshape((-1,) + (1,) * (d.ndim - 1))
+        return jnp.where(wr > 0, d, 0.0).sum(axis=0) / denom
+
+    return jax.tree_util.tree_map(one, delta)
 
 
 def make_fed_round_step(model: Model, optimizer: Optimizer,
@@ -198,11 +227,13 @@ def make_fed_round_step(model: Model, optimizer: Optimizer,
             metrics = {"loss": losses.mean(),
                        "local_losses": losses.mean(axis=(0,))}
             return FedState(synced, residual), metrics
+        pod_mean = (finite_pod_mean if fed_cfg.skip_nonfinite
+                    else lambda t: jax.tree_util.tree_map(
+                        lambda d: d.mean(axis=0), t))
         if fed_cfg.compression != "none":
             # mean over pods first (cheap: the compression operates on the
             # aggregated delta the server re-distributes — server-side STC)
-            delta_mean = jax.tree_util.tree_map(
-                lambda d: d.mean(axis=0), delta)
+            delta_mean = pod_mean(delta)
             corrected = jax.tree_util.tree_map(
                 lambda d, r: d + r, delta_mean, residual)
             compressed = comp.compress(corrected, fed_cfg.compression,
@@ -212,7 +243,7 @@ def make_fed_round_step(model: Model, optimizer: Optimizer,
                 lambda c, s: c - s, corrected, sent)
             agg = sent
         else:
-            agg = jax.tree_util.tree_map(lambda d: d.mean(axis=0), delta)
+            agg = pod_mean(delta)
 
         # 3) FedAvg: every pod applies the same aggregated delta
         new_params = jax.tree_util.tree_map(

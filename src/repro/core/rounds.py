@@ -23,19 +23,64 @@ from typing import Any, Callable, Dict, List, Optional
 import numpy as np
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.aggregation import weighted_train_loss
 from repro.core.batched import BatchedExecutor
 from repro.core.client import Client
-from repro.core.config import Config
+from repro.core.config import Config, validate_checkpoint_config
 from repro.core.server import Server
 from repro.core import compression as comp
 from repro.data.fed_data import FederatedDataset
 from repro.sched.greedyada import (
-    GreedyAda, one_per_device, random_allocation, slowest_allocation,
+    ClientProfile, GreedyAda, one_per_device, random_allocation,
+    slowest_allocation,
 )
-from repro.simulation.heterogeneity import SystemHeterogeneity
+from repro.simulation.heterogeneity import (
+    FaultInjector, FaultPlan, SystemHeterogeneity,
+)
 from repro.tracking import Tracker
+
+
+def _poison_update(update):
+    """Corrupt an uploaded update with NaNs (``faults.nan_update_prob``).
+
+    Applied *after* the compression stage — the model is a corrupted wire
+    payload, so the client's error-feedback residual stays clean.  For
+    ``CompressedTensor`` leaves the structure (and therefore the byte
+    accounting) is preserved: float payloads are poisoned directly, int8
+    payloads through their dequantization scale."""
+    nan = np.float32("nan")
+
+    def one(x):
+        if isinstance(x, comp.CompressedTensor):
+            if x.kind == "int8":
+                return comp.CompressedTensor(x.kind, x.data, x.scale * nan,
+                                             x.nnz)
+            return comp.CompressedTensor(
+                x.kind, np.asarray(x.data, np.float32) * nan, x.scale, x.nnz)
+        return np.asarray(x, np.float32) * nan
+
+    return jax.tree_util.tree_map(
+        one, update, is_leaf=lambda x: isinstance(x, comp.CompressedTensor))
+
+
+def update_is_valid(update, max_norm: float = 0.0) -> bool:
+    """Host-side NaN/Inf + norm-outlier guard for a gathered update.
+
+    The batched fast path runs the identical checks on-device on the
+    stacked update matrix (``BatchedExecutor.aggregate_stacked``); this is
+    the sequential/async/fallback twin.  ``max_norm`` bounds the update's
+    global L2 norm (0 disables the bound)."""
+    dense = comp.decompress(update)
+    sq = 0.0
+    for leaf in jax.tree_util.tree_leaves(dense):
+        a = np.asarray(leaf, np.float32)
+        if not np.isfinite(a).all():
+            return False
+        if max_norm > 0:
+            sq += float(np.sum(np.square(a.astype(np.float64))))
+    return not (max_norm > 0 and sq > float(max_norm) ** 2)
 
 
 class Trainer:
@@ -76,6 +121,22 @@ class Trainer:
             raise ValueError(
                 f"resources.staleness_power must be >= 0 (0 disables the "
                 f"staleness discount), got {res.staleness_power}")
+        if not np.isfinite(res.round_deadline) or res.round_deadline < 0:
+            raise ValueError(
+                f"resources.round_deadline must be a finite float >= 0 "
+                f"(0 = wait forever), got {res.round_deadline}")
+        validate_checkpoint_config(config.checkpoint)
+        # validates config.faults loudly (FaultInjector.__post_init__)
+        self.faults = FaultInjector(config.faults)
+        if config.faults.active and \
+                config.faults.min_clients_per_round > \
+                config.server.clients_per_round:
+            raise ValueError(
+                f"faults.min_clients_per_round="
+                f"{config.faults.min_clients_per_round} can never be met: "
+                f"only server.clients_per_round="
+                f"{config.server.clients_per_round} clients are selected "
+                f"per round")
         # async dispatch waves run through the batched executor too
         self.engine = (BatchedExecutor(model, distributed=res.distributed)
                        if res.execution in ("batched", "async") else None)
@@ -85,6 +146,9 @@ class Trainer:
             default_time=config.resources.default_client_time,
             momentum=config.resources.momentum)
         self.history: List[Dict[str, float]] = []
+        # error-feedback residuals loaded from a checkpoint, applied
+        # lazily when the owning client is materialized
+        self._pending_residuals: Dict[str, Any] = {}
 
     # ------------------------------------------------------------------
     def client(self, cid: str) -> Client:
@@ -100,6 +164,12 @@ class Trainer:
             self.clients[cid] = self.client_cls(
                 cid, self.model, self.fed_data.clients[cid],
                 ccfg, batch_size=self.cfg.data.batch_size)
+            if cid in self._pending_residuals:
+                # restore checkpointed error-feedback state (sequential
+                # compression path; the batched engines keep theirs in the
+                # executor's device-resident store)
+                self.clients[cid]._residual = jax.tree_util.tree_map(
+                    jnp.asarray, self._pending_residuals.pop(cid))
         return self.clients[cid]
 
     def _allocate(self, selected: List[str], round_id: int) -> List[List[str]]:
@@ -117,8 +187,59 @@ class Trainer:
         raise ValueError(f"unknown allocation {name!r}")
 
     # ------------------------------------------------------------------
+    # fault injection (cfg.faults — docs/faults.md)
+    # ------------------------------------------------------------------
+    def _plan_cohort(self, selected: List[str], round_id: int):
+        """Sample each selected client's :class:`FaultPlan`; when fewer
+        than ``faults.min_clients_per_round`` clients would survive the
+        pre-known failures (dropout/crash), re-select the cohort (bounded
+        attempts, then a loud ``ValueError``) instead of silently
+        aggregating a tiny one.  Deadline misses and guard rejections are
+        only known post-hoc and do not re-trigger selection."""
+        f = self.cfg.faults
+        floor = min(f.min_clients_per_round, len(selected))
+        attempts = 0
+        reselections = 0
+        while True:
+            plans = {c: self.faults.plan(c, round_id) for c in selected}
+            alive = sum(1 for p in plans.values() if not p.fails)
+            if alive >= floor:
+                return selected, plans, reselections
+            attempts += 1
+            if attempts > 20:
+                raise ValueError(
+                    f"faults.min_clients_per_round="
+                    f"{f.min_clients_per_round}: could not assemble a "
+                    f"cohort with >= {floor} surviving clients after "
+                    f"{attempts} selection attempts in round {round_id} "
+                    f"(last draw: {alive}/{len(selected)} survivors); "
+                    f"lower dropout/crash probabilities or the floor")
+            reselections += 1
+            selected = self.server.selection(self.fed_data.client_ids,
+                                             round_id)
+
+    def _effective_time(self, cid: str, base: float,
+                        plan: Optional[FaultPlan]) -> float:
+        """Virtual response time under a fault plan: stragglers scale the
+        training time before the heterogeneity simulation, a crash elapses
+        only ``crash_fraction`` of the round, and a dropout never responds
+        (0 contribution to the makespan)."""
+        if plan is None:
+            return self.het.simulate_time(cid, base)
+        if plan.dropout:
+            return 0.0
+        f = self.cfg.faults
+        t = base * (f.straggler_slowdown if plan.straggler else 1.0)
+        t = self.het.simulate_time(cid, t)
+        if plan.crash:
+            t *= plan.crash_fraction
+        return t
+
+    # ------------------------------------------------------------------
     def _run_batched(self, selected: List[str], payload: Dict[str, Any],
-                     round_id: int):
+                     round_id: int,
+                     plans: Optional[Dict[str, FaultPlan]] = None,
+                     counts: Optional[Dict[str, int]] = None):
         """Train the whole cohort in one compiled program, then run each
         client's post-train stages (compression/encryption/upload) so
         strategy overrides like STC keep working.
@@ -190,8 +311,44 @@ class Trainer:
             if method != "none":
                 st = self.engine.compress_stacked(
                     st, clients, method, self.cfg.client.stc_sparsity)
+            # Fault degradation on the fast path (cfg.faults): failed /
+            # deadline-exceeded clients are zero-weighted out of the
+            # FedAvg weight vector and NaN-injected uploads are poisoned
+            # post-compression (the error-feedback residuals stay clean)
+            # so the on-device guard in aggregate_stacked rejects them.
+            # The cohort still trains at full bucketed width — no shape
+            # change, no retrace — and with faults inactive every branch
+            # below is skipped, leaving the PR 1-5 pipeline byte-identical.
+            labels: Dict[str, str] = {}
+            mask = None
+            if plans is not None:
+                mask = np.ones((len(clients),), np.float32)
+                total_steps = max(int(st["n_steps"][: len(clients)].sum()),
+                                  1)
+                deadline = self.cfg.resources.round_deadline
+                for i, client in enumerate(clients):
+                    p = plans[client.client_id]
+                    base = st["wall"] * float(st["n_steps"][i]) / total_steps
+                    eff = self._effective_time(client.client_id, base, p)
+                    if p.dropout:
+                        mask[i], labels[client.client_id] = 0.0, "dropped"
+                    elif p.crash:
+                        mask[i], labels[client.client_id] = 0.0, "crashed"
+                    elif deadline > 0 and eff > deadline:
+                        mask[i], labels[client.client_id] = 0.0, "deadline"
+                        counts["deadline_missed"] += 1
+                nan_rows = np.asarray(
+                    [i for i, c in enumerate(clients)
+                     if plans[c.client_id].nan_update], np.int32)
+                if nan_rows.size:
+                    st["updates"] = jax.tree_util.tree_map(
+                        lambda a: a.at[nan_rows].set(jnp.nan),
+                        st["updates"])
             delta = self.engine.aggregate_stacked(
-                st, use_kernel=self.cfg.resources.aggregation_kernel)
+                st, use_kernel=self.cfg.resources.aggregation_kernel,
+                mask=mask, guard=plans is not None,
+                max_update_norm=(self.cfg.faults.max_update_norm
+                                 if plans is not None else 0.0))
             self.server.apply_delta(delta)
             results = self.engine.per_client_results(clients, st,
                                                      include_update=False)
@@ -206,6 +363,17 @@ class Trainer:
             for client, res, pb in zip(clients, results, payloads):
                 res["client_id"] = client.client_id
                 res["payload_bytes"] = pb
+            if plans is not None:
+                # one small host sync (N bools) for rejection accounting —
+                # only when faults are active
+                ok = np.asarray(jax.device_get(st["guard_ok"]))
+                for i, res in enumerate(results):
+                    lab = labels.get(res["client_id"])
+                    if lab is None and not ok[i]:
+                        lab = "rejected"
+                        counts["rejected"] += 1
+                    if lab is not None:
+                        res["_fault"] = lab
             return results, True
 
         if inprogram:
@@ -225,10 +393,24 @@ class Trainer:
         raw = self.engine.run_cohort(clients, global_params, round_id)
         results = []
         for client, res in zip(clients, raw):
+            p = plans.get(client.client_id) if plans is not None else None
+            if p is not None and p.fails:
+                # the update never arrives; skip the post-train stages so
+                # the client's error-feedback residual stays untouched
+                # (the whole cohort still trained at full bucketed width —
+                # no retrace).  run_round zero-weights via the label.
+                res.pop("update", None)
+                res["client_id"] = client.client_id
+                res["_fault"] = "dropped" if p.dropout else "crashed"
+                results.append(res)
+                continue
             res = client.compression(res)
             res = client.encryption(res)
             res["client_id"] = client.client_id
-            results.append(client.upload(res))
+            res = client.upload(res)
+            if p is not None and p.nan_update:
+                res["update"] = _poison_update(res["update"])
+            results.append(res)
         return results, False
 
     # ------------------------------------------------------------------
@@ -238,7 +420,21 @@ class Trainer:
                 'resources.execution="async" replaces the synchronous round '
                 "loop with an event loop; call Trainer.run()")
         server = self.server
+        f = self.cfg.faults
+        deadline = self.cfg.resources.round_deadline
         selected = server.selection(self.fed_data.client_ids, round_id)
+        plans = counts = None
+        # a response deadline alone (faults off) still needs the
+        # degradation path: plans are all NO_FAULT, only misses zero-weight
+        if f.active or deadline > 0:
+            selected, plans, reselections = self._plan_cohort(selected,
+                                                              round_id)
+            counts = {"deadline_missed": 0, "rejected": 0,
+                      "reselections": reselections,
+                      "dropped": sum(p.dropout for p in plans.values()),
+                      "crashed": sum(p.crash for p in plans.values()),
+                      "straggled": sum(p.straggler
+                                       for p in plans.values())}
         payload = server.distribution(selected)
         groups = self._allocate(selected, round_id)
 
@@ -249,37 +445,95 @@ class Trainer:
         up_bytes = 0
         if self.engine is not None:
             results, aggregated = self._run_batched(selected, payload,
-                                                    round_id)
+                                                    round_id, plans=plans,
+                                                    counts=counts)
             for res in results:
                 cid = res["client_id"]
                 wall_times[cid] = res["train_time"]
-                sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
+                sim_times[cid] = self._effective_time(
+                    cid, res["train_time"],
+                    plans[cid] if plans is not None else None)
         else:
             for group in groups:
                 for cid in group:
-                    res = self.client(cid).run_round(payload, round_id)
+                    p = plans[cid] if plans is not None else None
+                    if p is not None and p.dropout:
+                        # never responds; never even starts training
+                        wall_times[cid] = sim_times[cid] = 0.0
+                        continue
+                    if p is not None and p.crash:
+                        # dies mid-training: the update (and the
+                        # post-train stages — EF residuals stay clean)
+                        # never happens, but partial virtual time elapses
+                        c = self.client(cid)
+                        res = c.train(c.decompression(c.download(payload)),
+                                      round_id)
+                        res.pop("update")
+                        res["client_id"] = cid
+                        res["_fault"] = "crashed"
+                    else:
+                        res = self.client(cid).run_round(payload, round_id)
+                        if p is not None and p.nan_update:
+                            res["update"] = _poison_update(res["update"])
                     results.append(res)
                     wall_times[cid] = res["train_time"]
-                    sim_times[cid] = self.het.simulate_time(cid, res["train_time"])
+                    sim_times[cid] = self._effective_time(
+                        cid, res["train_time"], p)
+            # canonical selection order, not scheduler-group order: the
+            # groups follow *measured* times, so without this the FedAvg
+            # summation order (and the params, by one float ulp per round)
+            # would vary run to run and break bit-identical checkpoint
+            # resume (the batched path is already in selection order)
+            order = {cid: i for i, cid in enumerate(selected)}
+            results.sort(key=lambda r: order[r["client_id"]])
+        if plans is not None and not aggregated:
+            # graceful degradation for the gathered paths (the batched
+            # fast path already zero-weighted on device): deadline misses
+            # and guard rejections are only known post-hoc
+            for res in results:
+                cid = res["client_id"]
+                if res.get("_fault") is not None:
+                    continue
+                if deadline > 0 and sim_times[cid] > deadline:
+                    res["_fault"] = "deadline"
+                    counts["deadline_missed"] += 1
+                elif not update_is_valid(res["update"], f.max_update_norm):
+                    res["_fault"] = "rejected"
+                    counts["rejected"] += 1
+        survivors = [r for r in results if r.get("_fault") is None]
         # one batched host sync for the whole cohort's wire accounting
         # (compression.payload_bytes_many), instead of per-leaf blocking
-        # reads per client
-        up_bytes += sum(r["payload_bytes"] for r in results
+        # reads per client; crashed/dropped/deadline-missed uploads never
+        # reached the server, so their bytes do not count
+        arrived = (results if plans is None else
+                   [r for r in results
+                    if r.get("_fault") in (None, "rejected")])
+        up_bytes += sum(r["payload_bytes"] for r in arrived
                         if "payload_bytes" in r)
-        missing = [r for r in results if "payload_bytes" not in r]
+        missing = [r for r in arrived if "payload_bytes" not in r]
         if missing:
             up_bytes += sum(comp.payload_bytes_many(
                 [r["update"] for r in missing]))
 
-        # Eq. 1 makespan under the virtual clock
+        # Eq. 1 makespan under the virtual clock (the server stops
+        # waiting at the deadline, so per-client contributions cap there)
+        capped = (sim_times if plans is None or deadline <= 0 else
+                  {c: min(t, deadline) for c, t in sim_times.items()})
         round_virtual = max(
-            (sum(sim_times[c] for c in g) for g in groups if g), default=0.0)
-        self.scheduler.update(sim_times)
-        if not aggregated:
-            server.aggregation(results)
+            (sum(capped[c] for c in g) for g in groups if g), default=0.0)
+        if plans is None:
+            self.scheduler.update(sim_times)
+        else:
+            # a dropped client's 0.0 is no observation of its speed
+            self.scheduler.update({c: t for c, t in sim_times.items()
+                                   if not plans[c].dropout})
+        if not aggregated and (plans is None or survivors):
+            server.aggregation(survivors if plans is not None else results)
         wall = time.perf_counter() - t_wall0
 
-        train_loss = weighted_train_loss(results)
+        train_loss = weighted_train_loss(
+            survivors if plans is not None else results) \
+            if plans is None or survivors else float("nan")
         metrics = {
             "round_time": round_virtual,
             "wall_time": wall,
@@ -288,6 +542,11 @@ class Trainer:
             "comm_up_bytes": up_bytes,
             "train_loss": train_loss,
         }
+        if plans is not None:
+            metrics.update(
+                survivors=len(survivors),
+                survivor_fraction=len(survivors) / max(len(selected), 1),
+                **counts)
         if self.cfg.server.test_every and \
            (round_id + 1) % self.cfg.server.test_every == 0:
             metrics.update(server.test())
@@ -295,13 +554,100 @@ class Trainer:
         if self.cfg.tracking.enabled:
             self.tracker.track_round(self.cfg.task_id, round_id, **metrics)
             for r in results:
+                extra = ({} if r.get("_fault") is None
+                         else {"fault": r["_fault"]})
                 self.tracker.track_client(
                     self.cfg.task_id, round_id, r["client_id"],
                     train_time=wall_times[r["client_id"]],
                     simulated_time=sim_times[r["client_id"]],
-                    **r["metrics"])
+                    **r["metrics"], **extra)
         self.history.append(metrics)
         return metrics
+
+    # ------------------------------------------------------------------
+    # checkpoint / resume (cfg.checkpoint — repro.checkpoint.store)
+    # ------------------------------------------------------------------
+    def _maybe_checkpoint(self, completed: int) -> None:
+        ck = self.cfg.checkpoint
+        if ck.every and completed % ck.every == 0:
+            self.save_checkpoint(completed)
+
+    def save_checkpoint(self, completed: int) -> str:
+        """Atomically persist everything a fresh ``Trainer`` needs to
+        continue from round ``completed``: server params + selection RNG
+        (+ any FedBuff buffer, decompressed), round index, history, the
+        heterogeneity speed assignments (``speed_ratio`` uses the
+        process-randomized ``hash``, so they must be carried explicitly),
+        scheduler profiles, and the error-feedback residuals of both
+        engines.  The fault sampler is stateless (see
+        :class:`FaultInjector`) and needs no persisted state."""
+        from repro.checkpoint.store import save_checkpoint
+
+        state: Dict[str, Any] = {
+            "format": 1,
+            "round": int(completed),
+            "execution": self.cfg.resources.execution,
+            "server": self.server.state_dict(),
+            "history": self.history,
+            "het_assignment": dict(self.het.assignment),
+            "scheduler": {
+                "default_time": float(self.scheduler.default_time),
+                "profiles": {cid: [float(p.time), bool(p.profiled)]
+                             for cid, p in self.scheduler.profiles.items()},
+            },
+            "client_residuals": {
+                cid: jax.tree_util.tree_map(np.asarray, c._residual)
+                for cid, c in self.clients.items()
+                if c._residual is not None},
+        }
+        if self.engine is not None:
+            state["ef"] = self.engine.ef_state()
+        ck = self.cfg.checkpoint
+        return save_checkpoint(ck.dir, state, step=completed, keep=ck.keep)
+
+    def resume(self, callback: Optional[Callable] = None,
+               step: Optional[int] = None) -> Dict[str, Any]:
+        """Load the latest (or ``step``) checkpoint from
+        ``cfg.checkpoint.dir`` and continue training to completion.
+
+        Synchronous engines continue **bit-identically** to the
+        uninterrupted run (every source of randomness is either restored —
+        selection RNG, speed assignments, EF residuals — or deterministic:
+        data shuffles, the fault sampler), except under a
+        ``round_deadline``, whose misses depend on measured wall time.
+        The async engine resumes its remaining buffer aggregations from
+        the checkpointed model/version; in-flight work at the kill is
+        re-dispatched, so its trajectory is equivalent but not
+        bit-identical (see docs/faults.md)."""
+        from repro.checkpoint.store import load_checkpoint
+
+        state = load_checkpoint(self.cfg.checkpoint.dir, step)
+        if state.get("execution") != self.cfg.resources.execution:
+            raise ValueError(
+                f"checkpoint was written by a "
+                f"{state.get('execution')!r}-execution run; this trainer "
+                f"uses {self.cfg.resources.execution!r} — resume with the "
+                f"same engine")
+        completed = int(state["round"])
+        self.server.load_state_dict(state["server"])
+        self.server.params = jax.tree_util.tree_map(
+            jnp.asarray, self.server.params)
+        self.history = list(state.get("history", []))
+        self.het.assignment = {str(k): float(v) for k, v in
+                               state.get("het_assignment", {}).items()}
+        sched = state.get("scheduler", {})
+        self.scheduler.default_time = float(
+            sched.get("default_time", self.scheduler.default_time))
+        for cid, (t, profiled) in sched.get("profiles", {}).items():
+            self.scheduler.profiles[str(cid)] = ClientProfile(
+                time=float(t), profiled=bool(profiled))
+        self._pending_residuals = dict(state.get("client_residuals", {}))
+        if self.engine is not None and "ef" in state:
+            self.engine.load_ef_state(state["ef"])
+        if self.cfg.tracking.enabled:
+            from repro.core.config import to_dict
+            self.tracker.create_task(self.cfg.task_id, to_dict(self.cfg))
+        return self._run(callback, start_round=completed)
 
     # ------------------------------------------------------------------
     def run(self, callback: Optional[Callable] = None) -> Dict[str, Any]:
@@ -311,12 +657,21 @@ class Trainer:
         if self.cfg.tracking.enabled:
             from repro.core.config import to_dict
             self.tracker.create_task(self.cfg.task_id, to_dict(self.cfg))
+        return self._run(callback, start_round=0)
+
+    def _run(self, callback: Optional[Callable],
+             start_round: int) -> Dict[str, Any]:
+        """Round loop shared by :meth:`run` (from 0) and :meth:`resume`."""
         if self.cfg.resources.execution == "async":
             from repro.core.async_engine import AsyncEngine
-            self.history.extend(AsyncEngine(self).run())
+            # the engine appends each aggregation to self.history itself
+            # (so periodic checkpoints see it) and sizes its remaining
+            # budget from len(history)
+            AsyncEngine(self).run()
         else:
-            for r in range(self.cfg.server.rounds):
+            for r in range(start_round, self.cfg.server.rounds):
                 self.run_round(r)
+                self._maybe_checkpoint(r + 1)
         self.server.finalize()
         summary = {
             "task_id": self.cfg.task_id,

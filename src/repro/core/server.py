@@ -66,6 +66,22 @@ class Server:
         flush leftover updates here."""
 
     # ------------------------------------------------------------------
+    # checkpointing (Trainer.save_checkpoint / resume)
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        """Serializable server state: params + the selection RNG.
+
+        The RNG state is what makes a resumed run draw the *same* client
+        cohorts as the uninterrupted one — selection is the only stochastic
+        server stage.  Subclasses with extra state (FedBuff's buffer)
+        extend the dict."""
+        return {"params": self.params, "rng": self.rng.get_state()}
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        self.params = state["params"]
+        self.rng.set_state(tuple(state["rng"]))
+
+    # ------------------------------------------------------------------
     def test(self) -> Dict[str, float]:
         if self.test_data is None:
             return {}

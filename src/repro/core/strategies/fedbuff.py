@@ -70,6 +70,31 @@ class FedBuffServer(Server):
             self._apply(self._buffer)
             self._buffer = []
 
+    def buffered_client_ids(self) -> List[str]:
+        """Client ids with a buffered-but-unaggregated update.
+
+        The fault layer uses this to keep accounting honest: a completion
+        rejected by the NaN/outlier guard must never sit in the buffer
+        (it is re-dispatched instead — re-dispatch + a buffered copy would
+        double-count the client), and leftover carry across rounds stays
+        inspectable for tests/monitoring."""
+        return [r["client_id"] for r in self._buffer if "client_id" in r]
+
+    def state_dict(self) -> Dict[str, Any]:
+        """Server state + the leftover buffer (updates decompressed to
+        dense before serialization — ``CompressedTensor`` leaves do not
+        survive msgpack, and ``_apply`` decompresses on aggregation anyway
+        so the resumed flush is value-identical)."""
+        state = super().state_dict()
+        state["buffer"] = [
+            {**r, "update": comp.decompress(r["update"])}
+            for r in self._buffer]
+        return state
+
+    def load_state_dict(self, state: Dict[str, Any]) -> None:
+        super().load_state_dict(state)
+        self._buffer = [dict(r) for r in state.get("buffer", [])]
+
     def buffered_apply(self, batch: List[Dict[str, Any]]) -> None:
         """Apply one buffer of results, each carrying ``_staleness``.
 

@@ -29,7 +29,8 @@ from typing import Any, Dict, Optional, Sequence
 import numpy as np
 
 from repro.core.config import (
-    SystemHeterogeneityConfig, validate_hyperparam_choices,
+    FaultConfig, SystemHeterogeneityConfig, validate_fault_config,
+    validate_hyperparam_choices,
 )
 
 
@@ -79,6 +80,66 @@ class SystemHeterogeneity:
 
     def round_times(self, base_times: Dict[str, float]) -> Dict[str, float]:
         return {c: self.simulate_time(c, t) for c, t in base_times.items()}
+
+
+# ---------------------------------------------------------------------------
+# Client-failure injection (FLGo-style unreliability)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class FaultPlan:
+    """One client's sampled faults for one round (all-False = healthy)."""
+
+    dropout: bool = False        # never responds this round
+    crash: bool = False          # dies mid-training; partial time elapses
+    crash_fraction: float = 1.0  # fraction of the round trained before dying
+    straggler: bool = False      # slowed by cfg.straggler_slowdown
+    nan_update: bool = False     # uploads a corrupted (non-finite) update
+
+    @property
+    def fails(self) -> bool:
+        """True when no (valid or invalid) update can arrive at all."""
+        return self.dropout or self.crash
+
+
+NO_FAULT = FaultPlan()
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic per-(client, round) fault sampling.
+
+    Stateless by construction: each draw seeds an ``np.random.RandomState``
+    from an FNV-1a hash of ``(client_id, round_id, cfg.seed)`` (process-
+    stable, unlike ``hash``), so fault schedules replay identically across
+    runs, engines, and checkpoint/resume boundaries without any sampler
+    state to persist.  Draws use a fixed order/count so individual
+    probabilities stay independent knobs.  Dropout shadows crash shadows
+    NaN-injection (a client that never responds cannot also upload
+    garbage); stragglers compose with any of them."""
+
+    cfg: FaultConfig
+
+    def __post_init__(self):
+        validate_fault_config(self.cfg)
+
+    def plan(self, client_id: str, round_id: int) -> FaultPlan:
+        f = self.cfg
+        if not f.active:
+            return NO_FAULT
+        rng = np.random.RandomState(
+            (_stable_hash(f"{client_id}|round{int(round_id)}")
+             ^ (f.seed * 2654435761)) % (2**31))
+        u = rng.random_sample(5)
+        dropout = bool(u[0] < f.dropout_prob)
+        crash = bool(not dropout and u[1] < f.crash_prob)
+        straggler = bool(u[2] < f.straggler_prob)
+        nan_update = bool(not dropout and not crash
+                          and u[3] < f.nan_update_prob)
+        return FaultPlan(dropout=dropout, crash=crash,
+                         crash_fraction=float(u[4]), straggler=straggler,
+                         nan_update=nan_update)
 
 
 def straggler_stats(times: Dict[str, float]) -> Dict[str, float]:

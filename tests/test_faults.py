@@ -1,0 +1,473 @@
+"""Fault-tolerant rounds (cfg.faults / cfg.checkpoint — docs/faults.md).
+
+* parity: all probabilities 0 => bit-identical params + identical metric
+  keys vs a config with no faults block, on every engine, with zero
+  extra retraces of the batched cohort program;
+* graceful degradation: survivors-only FedAvg matches a hand-computed
+  oracle under dropout; NaN-injected / norm-outlier updates never reach
+  the server params; crashes and deadline misses zero-weight out;
+* checkpoint/resume: kill-and-resume continues bit-identically for the
+  synchronous engines (params AND the next checkpoint file), including
+  the error-feedback residual stores of the compressed fast path;
+* async: failures retry with exponential backoff, counters land in the
+  per-aggregation metrics, runaway failure rates raise loudly, and
+  resume continues the remaining buffer aggregations.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batched import cohort_trace_count
+from repro.core.config import Config, FaultConfig, validate_fault_config
+from repro.core.rounds import Trainer, update_is_valid, _poison_update
+from repro.core.server import Server
+from repro.data.fed_data import build_federated_data
+from repro.models.registry import get_model
+from repro.simulation.heterogeneity import FaultInjector
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _make_trainer(execution, faults=None, resources=None, ckpt=None,
+                  comp="none", rounds=3, server_cls=Server):
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": 8, "batch_size": 32},
+        "server": {"rounds": rounds, "clients_per_round": 5, "test_every": 0},
+        "client": {"local_epochs": 2, "lr": 0.1, "compression": comp},
+        "resources": {"execution": execution, **(resources or {})},
+        "tracking": {"enabled": False},
+        "faults": faults or {},
+        "checkpoint": ckpt or {},
+    })
+    model = get_model("linear")
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=server_cls(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(cfg.seed))
+    return trainer
+
+
+def _leaves(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def _params_equal(a, b):
+    return all(np.array_equal(x, y) for x, y in zip(_leaves(a), _leaves(b)))
+
+
+ASYNC_RES = {"buffer_size": 3, "max_concurrency": 5}
+
+
+# ---------------------------------------------------------------------------
+# parity: faults disabled is byte-identical to no faults block at all
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("execution,resources", [
+    ("sequential", None),
+    ("batched", None),
+    ("async", ASYNC_RES),
+])
+def test_faults_all_zero_is_bit_identical(execution, resources):
+    r0 = _make_trainer(execution, resources=resources).run()
+    r1 = _make_trainer(
+        execution, resources=resources,
+        faults={"dropout_prob": 0.0, "crash_prob": 0.0, "straggler_prob": 0.0,
+                "nan_update_prob": 0.0, "max_update_norm": 0.0,
+                "seed": 7}).run()
+    assert _params_equal(r0["params"], r1["params"])
+    # no fault accounting keys leak into a faults-off history
+    for h0, h1 in zip(r0["history"], r1["history"]):
+        assert set(h0) == set(h1)
+        assert "dropped" not in h1 and "survivors" not in h1
+
+
+def test_batched_faults_do_not_retrace():
+    """Failures are handled in the weight vector / timing layer: the
+    cohort program never changes shape, so rounds with dropout + NaN
+    injection reuse the round-0 trace."""
+    t = _make_trainer("batched", faults={"dropout_prob": 0.4,
+                                         "nan_update_prob": 0.2, "seed": 1})
+    t.run_round(0)
+    traces_after_first = cohort_trace_count()
+    for r in range(1, 4):
+        t.run_round(r)
+    assert cohort_trace_count() == traces_after_first
+
+
+# ---------------------------------------------------------------------------
+# graceful degradation: survivors-only FedAvg
+# ---------------------------------------------------------------------------
+
+
+def test_dropout_survivors_match_hand_computed_fedavg():
+    """Zero-weighting + renormalization == plain FedAvg over the
+    survivor subset: compare against a twin trainer that trains only the
+    survivors and aggregates them directly (bit-identical, same order)."""
+    faults = {"dropout_prob": 0.5, "seed": 11}
+    tA = _make_trainer("sequential", faults=faults)
+    tB = _make_trainer("sequential")
+    mA = tA.run_round(0)
+
+    selected = tB.server.selection(tB.fed_data.client_ids, 0)
+    plans = {c: tA.faults.plan(c, 0) for c in selected}
+    survivors = [c for c in selected if not plans[c].dropout]
+    assert 0 < len(survivors) < len(selected)  # the draw actually drops
+    assert mA["dropped"] == len(selected) - len(survivors)
+    assert mA["survivors"] == len(survivors)
+    payload = tB.server.distribution(selected)
+    results = [tB.client(c).run_round(payload, 0) for c in survivors]
+    tB.server.aggregation(results)
+    assert _params_equal(tA.server.params, tB.server.params)
+
+
+def test_batched_matches_sequential_under_faults():
+    faults = {"dropout_prob": 0.3, "crash_prob": 0.2, "seed": 4}
+    rs = _make_trainer("sequential", faults=faults).run()
+    rb = _make_trainer("batched", faults=faults).run()
+    for a, b in zip(_leaves(rs["params"]), _leaves(rb["params"])):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+    # the plan-derived counters are engine-independent
+    for hs, hb in zip(rs["history"], rb["history"]):
+        for k in ("dropped", "crashed", "straggled", "survivors", "clients"):
+            assert hs[k] == hb[k], k
+
+
+@pytest.mark.parametrize("execution", ["sequential", "batched"])
+def test_nan_injected_updates_never_reach_params(execution):
+    t = _make_trainer(execution, faults={"nan_update_prob": 1.0})
+    p0 = jax.tree_util.tree_map(np.array, t.server.params)
+    r = t.run()
+    assert _params_equal(p0, t.server.params)   # zero delta, not NaN
+    for h in r["history"]:
+        assert h["rejected"] == h["clients"]
+        assert h["survivors"] == 0
+        assert np.isnan(h["train_loss"])
+
+
+@pytest.mark.parametrize("execution", ["sequential", "batched"])
+def test_norm_outlier_guard_rejects_everything_at_tiny_bound(execution):
+    t = _make_trainer(execution, faults={"max_update_norm": 1e-12})
+    p0 = jax.tree_util.tree_map(np.array, t.server.params)
+    r = t.run()
+    assert _params_equal(p0, t.server.params)
+    assert all(h["rejected"] == h["clients"] for h in r["history"])
+
+
+def test_crash_drops_update_but_elapses_partial_time():
+    # floor 0: with crash_prob=1 no cohort can satisfy the default
+    # min_clients_per_round=1 floor (that raising is its own test above)
+    t = _make_trainer("sequential", faults={"crash_prob": 1.0,
+                                            "min_clients_per_round": 0})
+    p0 = jax.tree_util.tree_map(np.array, t.server.params)
+    m = t.run_round(0)
+    assert m["crashed"] == m["clients"] and m["survivors"] == 0
+    assert m["round_time"] > 0.0          # partial virtual time elapsed
+    assert _params_equal(p0, t.server.params)
+
+
+def test_straggler_slowdown_stretches_round_time():
+    base = _make_trainer("sequential").run_round(0)
+    slow = _make_trainer(
+        "sequential",
+        faults={"straggler_prob": 1.0,
+                "straggler_slowdown": 10.0}).run_round(0)
+    assert slow["straggled"] == slow["clients"]
+    assert slow["survivors"] == slow["clients"]   # slow, but not failed
+    assert slow["round_time"] > 2.0 * base["round_time"]
+
+
+@pytest.mark.parametrize("execution", ["sequential", "batched"])
+def test_round_deadline_zero_weights_misses_without_fault_probs(execution):
+    """resources.round_deadline alone (no fault probabilities) activates
+    the degradation path: every client misses an impossibly tight
+    deadline, so the round completes with zero survivors and unchanged
+    params."""
+    t = _make_trainer(execution, resources={"round_deadline": 1e-12})
+    p0 = jax.tree_util.tree_map(np.array, t.server.params)
+    m = t.run_round(0)
+    assert m["deadline_missed"] == m["clients"] and m["survivors"] == 0
+    assert m["round_time"] <= 1e-12 * m["clients"]   # makespan caps there
+    assert _params_equal(p0, t.server.params)
+
+
+# ---------------------------------------------------------------------------
+# min_clients_per_round floor
+# ---------------------------------------------------------------------------
+
+
+def test_min_clients_floor_triggers_reselection_and_survives():
+    t = _make_trainer("sequential",
+                      faults={"dropout_prob": 0.5, "seed": 2,
+                              "min_clients_per_round": 3})
+    m = t.run_round(0)
+    assert m["survivors"] >= 3
+    assert m["reselections"] >= 0
+
+
+def test_min_clients_floor_unreachable_raises():
+    t = _make_trainer("sequential",
+                      faults={"dropout_prob": 0.98, "seed": 0,
+                              "min_clients_per_round": 5})
+    with pytest.raises(ValueError, match="min_clients_per_round"):
+        t.run_round(0)
+
+
+def test_min_clients_floor_above_cohort_size_rejected_at_init():
+    with pytest.raises(ValueError, match="can never be met"):
+        _make_trainer("sequential", faults={"dropout_prob": 0.1,
+                                            "min_clients_per_round": 6})
+
+
+# ---------------------------------------------------------------------------
+# deterministic sampling + validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_injector_is_deterministic_per_client_round():
+    inj = FaultInjector(FaultConfig(dropout_prob=0.4, crash_prob=0.3,
+                                    straggler_prob=0.5, nan_update_prob=0.2,
+                                    seed=9))
+    a = [inj.plan(f"c{i}", r) for i in range(20) for r in range(5)]
+    b = [inj.plan(f"c{i}", r) for i in range(20) for r in range(5)]
+    assert a == b
+    # a different seed decorrelates the draws
+    other = FaultInjector(FaultConfig(dropout_prob=0.4, crash_prob=0.3,
+                                      straggler_prob=0.5,
+                                      nan_update_prob=0.2, seed=10))
+    c = [other.plan(f"c{i}", r) for i in range(20) for r in range(5)]
+    assert c != a
+    # dropout/crash/nan are mutually exclusive on one (client, round)
+    for p in a:
+        assert p.dropout + p.crash + p.nan_update <= 1
+        assert 0.0 <= p.crash_fraction <= 1.0
+
+
+@pytest.mark.parametrize("bad,match", [
+    ({"dropout_prob": 1.5}, "dropout_prob"),
+    ({"crash_prob": -0.1}, "crash_prob"),
+    ({"straggler_slowdown": 0.5}, "straggler_slowdown"),
+    ({"max_update_norm": float("inf")}, "max_update_norm"),
+    ({"min_clients_per_round": -1}, "min_clients_per_round"),
+    ({"max_retries": -2}, "max_retries"),
+    ({"retry_backoff": float("nan")}, "retry_backoff"),
+])
+def test_fault_config_validation_is_loud(bad, match):
+    with pytest.raises(ValueError, match=match):
+        validate_fault_config(FaultConfig(**bad))
+
+
+def test_poison_and_guard_helpers():
+    clean = {"w": np.ones((3, 2), np.float32), "b": np.zeros(2, np.float32)}
+    assert update_is_valid(clean)
+    bad = _poison_update(clean)
+    assert not update_is_valid(bad)
+    # norm bound: a clean update with norm sqrt(6) fails a bound of 1.0
+    assert not update_is_valid(clean, max_norm=1.0)
+    assert update_is_valid(clean, max_norm=10.0)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("execution,comp,faults", [
+    ("sequential", "none", None),
+    ("sequential", "stc", {"dropout_prob": 0.3, "seed": 5}),
+    ("batched", "stc", {"dropout_prob": 0.3, "seed": 5}),
+    ("batched", "int8", {"crash_prob": 0.3, "seed": 2}),
+])
+def test_kill_and_resume_is_bit_identical(tmp_path, execution, comp, faults):
+    """Run A trains 4 rounds straight through; run B is killed after
+    round 2 and resumed by a FRESH trainer from the checkpoint.  Both the
+    final params and the step-4 checkpoint must match bit for bit —
+    including the compressed fast path's error-feedback residuals and the
+    fault sampler's decisions."""
+    from repro.checkpoint.store import load_checkpoint
+
+    dir_a, dir_b = str(tmp_path / "A"), str(tmp_path / "B")
+    ra = _make_trainer(execution, faults=faults, comp=comp, rounds=4,
+                       ckpt={"every": 2, "dir": dir_a}).run()
+
+    tb = _make_trainer(execution, faults=faults, comp=comp, rounds=4,
+                       ckpt={"every": 2, "dir": dir_b})
+    for r in range(2):                      # ... killed after round 2
+        tb.run_round(r)
+        tb._maybe_checkpoint(r + 1)
+    tc = _make_trainer(execution, faults=faults, comp=comp, rounds=4,
+                       ckpt={"every": 2, "dir": dir_b})
+    rc = tc.resume()
+
+    assert _params_equal(ra["params"], rc["params"])
+    assert len(rc["history"]) == 4
+    cka = load_checkpoint(dir_a, 4)
+    ckb = load_checkpoint(dir_b, 4)
+    assert _params_equal(cka["server"]["params"], ckb["server"]["params"])
+    assert [h["train_loss"] for h in cka["history"]] == \
+        [h["train_loss"] for h in ckb["history"]]
+
+
+def test_resume_with_wrong_engine_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    _make_trainer("sequential", ckpt={"every": 2, "dir": d}, rounds=2).run()
+    t = _make_trainer("batched", ckpt={"every": 2, "dir": d}, rounds=2)
+    with pytest.raises(ValueError, match="same engine"):
+        t.resume()
+
+
+def test_checkpoint_sweeps_stale_tmp_and_lists_available_steps(tmp_path):
+    from repro.checkpoint.store import (
+        available_steps, load_checkpoint, save_checkpoint,
+    )
+
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    stale = os.path.join(d, "killed_mid_write.tmp")
+    with open(stale, "wb") as f:
+        f.write(b"partial")
+    save_checkpoint(d, {"x": 1}, step=2)
+    save_checkpoint(d, {"x": 2}, step=4)
+    assert not os.path.exists(stale)
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+    assert available_steps(d) == [2, 4]
+    with pytest.raises(FileNotFoundError, match=r"available steps: \[2, 4\]"):
+        load_checkpoint(d, step=3)
+
+
+def test_checkpoint_keep_gc(tmp_path):
+    from repro.checkpoint.store import available_steps, save_checkpoint
+
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, {"s": s}, step=s, keep=2)
+    assert available_steps(d) == [4, 5]
+
+
+# ---------------------------------------------------------------------------
+# async engine: failures, retry, guard, resume
+# ---------------------------------------------------------------------------
+
+
+def test_async_dropout_retries_and_completes():
+    t = _make_trainer("async", resources=ASYNC_RES,
+                      faults={"dropout_prob": 0.3, "seed": 1,
+                              "retry_backoff": 0.01})
+    r = t.run()
+    assert len(r["history"]) == 3
+    totals = {k: sum(h[k] for h in r["history"])
+              for k in ("dropped", "retried", "rejected")}
+    assert totals["dropped"] > 0
+    assert totals["retried"] > 0
+    for leaf in _leaves(t.server.params):
+        assert np.isfinite(leaf).all()
+
+
+def test_async_nan_guard_rejects_and_redispatches():
+    t = _make_trainer("async", resources=ASYNC_RES,
+                      faults={"nan_update_prob": 0.3, "seed": 6,
+                              "retry_backoff": 0.01})
+    r = t.run()
+    assert len(r["history"]) == 3
+    assert sum(h["rejected"] for h in r["history"]) > 0
+    for leaf in _leaves(t.server.params):
+        assert np.isfinite(leaf).all()
+
+
+def test_async_runaway_failure_rate_raises():
+    t = _make_trainer("async", rounds=1,
+                      resources={"buffer_size": 2, "max_concurrency": 2},
+                      faults={"dropout_prob": 1.0, "max_retries": 1,
+                              "retry_backoff": 0.001})
+    with pytest.raises(ValueError, match="cannot make progress"):
+        t.run()
+
+
+def test_async_resume_continues_remaining_aggregations(tmp_path):
+    d = str(tmp_path / "ck")
+    t = _make_trainer("async", rounds=4, resources=ASYNC_RES,
+                      ckpt={"every": 2, "dir": d})
+    t.run()
+    assert len(t.history) == 4
+    tc = _make_trainer("async", rounds=4, resources=ASYNC_RES,
+                       ckpt={"every": 2, "dir": d})
+    rc = tc.resume(step=2)       # killed after the 2nd aggregation
+    assert len(rc["history"]) == 4
+    assert rc["history"][:2] == t.history[:2]   # restored verbatim
+    for leaf in _leaves(tc.server.params):
+        assert np.isfinite(leaf).all()
+
+
+# ---------------------------------------------------------------------------
+# FedBuff buffer accounting (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_fedbuff_buffered_ids_leftover_carry_and_state_roundtrip():
+    from repro.core.strategies.fedbuff import FedBuffServer
+
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": 4},
+        "resources": {"buffer_size": 5},
+    })
+    model = get_model("linear")
+    fed = build_federated_data(cfg.data)
+    srv = FedBuffServer(model, cfg, fed.test)
+    srv.params = model.init(jax.random.PRNGKey(0))
+    shapes = jax.tree_util.tree_map(np.shape, srv.params)
+
+    def result(i):
+        upd = jax.tree_util.tree_map(
+            lambda s: np.full(s, 0.01, np.float32), shapes,
+            is_leaf=lambda x: isinstance(x, tuple))
+        return {"client_id": f"c{i}", "update": upd, "num_samples": 10,
+                "train_time": float(i)}
+
+    srv.aggregation([result(i) for i in range(3)])
+    assert srv.buffered_client_ids() == ["c0", "c1", "c2"]  # sub-K: carried
+    srv.aggregation([result(i) for i in range(3, 6)])       # 6 >= K=5
+    assert srv.buffered_client_ids() == ["c5"]              # leftover carry
+
+    # checkpoint round-trip preserves the leftover buffer
+    state = srv.state_dict()
+    srv2 = FedBuffServer(model, cfg, fed.test)
+    srv2.load_state_dict(state)
+    assert srv2.buffered_client_ids() == ["c5"]
+    p_before = jax.tree_util.tree_map(np.array, srv2.params)
+    srv2.finalize()
+    assert srv2.buffered_client_ids() == []
+    assert not _params_equal(p_before, srv2.params)   # flush applied it
+
+
+# ---------------------------------------------------------------------------
+# multi-pod fed_round guard (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_finite_pod_mean_zero_weights_bad_pods():
+    from repro.core.federated import finite_pod_mean
+
+    good = np.arange(12, dtype=np.float32).reshape(4, 3)
+    tree = {"w": good.copy(), "b": np.ones((4, 2), np.float32)}
+    tree["w"][1] = np.nan                     # pod 1 diverged
+    out = finite_pod_mean(tree)
+    keep = [0, 2, 3]
+    np.testing.assert_allclose(np.asarray(out["w"]), good[keep].mean(axis=0))
+    np.testing.assert_allclose(np.asarray(out["b"]), np.ones(2))
+    # all-bad degrades to a zero delta instead of NaN
+    allbad = {"w": np.full((2, 3), np.nan, np.float32)}
+    np.testing.assert_array_equal(np.asarray(finite_pod_mean(allbad)["w"]),
+                                  np.zeros(3))
+
+
+def test_fed_round_config_skip_nonfinite_flag_exists():
+    from repro.core.federated import FedRoundConfig
+    assert FedRoundConfig().skip_nonfinite is False
+    assert FedRoundConfig(skip_nonfinite=True).skip_nonfinite is True

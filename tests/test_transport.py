@@ -1,0 +1,152 @@
+"""Failure paths and latency accounting for ``repro.comm.transport``.
+
+The round runtimes treat a transport error as a client failure
+(cfg.faults retry machinery), so the transports must fail *loudly and
+typed*: ``ConnectionError`` for dead sockets, the handler's own
+exception for application errors — never a silent empty response.
+"""
+import socket
+import threading
+
+import numpy as np
+import pytest
+
+from repro.comm.transport import (
+    InProcessTransport, RPCServer, SocketTransport, _recv_exact,
+    parallel_requests,
+)
+
+
+def _echo(method, payload):
+    return {"method": method, "payload": payload}
+
+
+# ---------------------------------------------------------------------------
+# in-process transport
+# ---------------------------------------------------------------------------
+
+
+def test_inprocess_roundtrip_tracks_stats_and_latency():
+    tr = InProcessTransport(_echo, latency=0.01)
+    out = tr.request("train", {"x": np.arange(3, dtype=np.float32)})
+    assert out["method"] == "train"
+    np.testing.assert_array_equal(out["payload"]["x"],
+                                  np.arange(3, dtype=np.float32))
+    assert tr.stats.requests == 1
+    assert tr.stats.bytes_sent > 0 and tr.stats.bytes_received > 0
+    assert tr.stats.total_latency >= 0.01   # injected network latency
+
+
+def test_inprocess_handler_error_propagates():
+    def boom(method, payload):
+        raise RuntimeError("client exploded mid-round")
+
+    tr = InProcessTransport(boom)
+    with pytest.raises(RuntimeError, match="exploded"):
+        tr.request("train", {})
+    # a failed request is not silently counted as delivered
+    assert tr.stats.requests == 0
+
+
+# ---------------------------------------------------------------------------
+# socket transport against the RPC server
+# ---------------------------------------------------------------------------
+
+
+def test_socket_roundtrip_and_parallel_requests():
+    server = RPCServer(_echo).start()
+    try:
+        trs = [SocketTransport(server.address) for _ in range(3)]
+        outs = parallel_requests(trs, "ping", [{"i": i} for i in range(3)])
+        assert [o["payload"]["i"] for o in outs] == [0, 1, 2]
+        assert all(t.stats.requests == 1 for t in trs)
+        for t in trs:
+            t.close()
+    finally:
+        server.stop()
+
+
+def test_server_dying_mid_request_raises_connection_error():
+    """A server that accepts, reads part of the request, then dies: the
+    client's reply stream ends mid-message and must surface as a
+    ``ConnectionError`` — the typed signal the fault layer retries on."""
+    lsock = socket.socket()
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+
+    def drop():
+        conn, _ = lsock.accept()
+        conn.recv(16)
+        conn.close()
+
+    th = threading.Thread(target=drop, daemon=True)
+    th.start()
+    tr = SocketTransport(lsock.getsockname())
+    try:
+        with pytest.raises((ConnectionError, OSError)):
+            tr.request("ping", {"i": 2})
+    finally:
+        tr.close()
+        lsock.close()
+        th.join(timeout=5)
+
+
+def test_socket_request_after_local_close_raises():
+    server = RPCServer(_echo).start()
+    try:
+        tr = SocketTransport(server.address)
+        tr.close()
+        with pytest.raises(OSError):
+            tr.request("ping", {})
+        tr.close()   # close is idempotent
+    finally:
+        server.stop()
+
+
+def test_recv_exact_raises_on_truncated_stream():
+    a, b = socket.socketpair()
+    try:
+        a.sendall(b"abc")
+        a.close()               # stream ends before the 8 requested bytes
+        with pytest.raises(ConnectionError, match="socket closed"):
+            _recv_exact(b, 8)
+    finally:
+        b.close()
+
+
+def test_socket_transport_is_thread_safe_under_contention():
+    """The per-transport lock serializes request/reply pairs: concurrent
+    callers on ONE socket must never interleave frames."""
+    server = RPCServer(_echo).start()
+    try:
+        tr = SocketTransport(server.address)
+        outs = [None] * 8
+
+        def hit(i):
+            outs[i] = tr.request("ping", {"i": i})
+
+        threads = [threading.Thread(target=hit, args=(i,)) for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert sorted(o["payload"]["i"] for o in outs) == list(range(8))
+        assert tr.stats.requests == 8
+        tr.close()
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# simulated network latency (system_heterogeneity.network_latency)
+# ---------------------------------------------------------------------------
+
+
+def test_simulated_network_latency_adds_to_virtual_time():
+    from repro.core.config import SystemHeterogeneityConfig
+    from repro.simulation.heterogeneity import SystemHeterogeneity
+
+    het = SystemHeterogeneity(
+        SystemHeterogeneityConfig(enabled=True, network_latency=0.25))
+    het.assignment["c0"] = 2.0
+    assert het.simulate_time("c0", 1.0) == pytest.approx(2.25)

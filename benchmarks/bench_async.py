@@ -20,7 +20,7 @@ the synchronous batched model bit-near (max |param diff|).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, Sequence
+from typing import Dict, Iterable
 
 import jax
 import numpy as np

@@ -9,7 +9,6 @@ the straggler.  Reproduced with the FedReID dataset-size profile
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.sched.greedyada import GreedyAda

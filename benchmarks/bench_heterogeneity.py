@@ -6,7 +6,6 @@ fastest; system heterogeneity widens the gap; the combination is widest.
 """
 from __future__ import annotations
 
-import numpy as np
 
 import repro as easyfl
 from benchmarks.common import emit

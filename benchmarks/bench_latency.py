@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks.common import emit
 from repro.comm.transport import RPCServer, SocketTransport, parallel_requests

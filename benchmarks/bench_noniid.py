@@ -6,7 +6,6 @@ increasing statistical heterogeneity increases the gap.
 """
 from __future__ import annotations
 
-import numpy as np
 
 import repro as easyfl
 from benchmarks.common import emit

@@ -56,7 +56,7 @@ def _minimal_fedavg(model, fed, rounds, clients_per_round, epochs, lr, bs,
 def main():
     rounds, cpr, epochs, lr, bs = 3, 5, 2, 0.1, 32
     easyfl.reset()
-    cfg = easyfl.init({
+    easyfl.init({
         "model": "linear", "dataset": "synthetic",
         "data": {"num_clients": 15, "batch_size": bs},
         "server": {"rounds": rounds, "clients_per_round": cpr,

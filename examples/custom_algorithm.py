@@ -6,7 +6,6 @@ scheduling — is reused from the platform.
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 import repro as easyfl
 from repro.core import compression as comp

@@ -24,7 +24,11 @@ recorded in ``scripts/test_baseline.json`` (seed had 29 failures; the
 mesh-API + HLO-analyzer fixes brought it to 0).  ``--update`` rewrites the
 baseline after an intentional change.  Also runs the doc-sync gate
 (``scripts/check_docs.py``): every config field documented in
-``docs/config.md`` and the README quickstart still runs.
+``docs/config.md`` and the README quickstart still runs.  And the
+compiled-program contracts gate (``scripts/flcheck.py --contracts``):
+retrace budget, no host transfers in the round HLO, and the roofline
+ratchet against ``scripts/roofline_baseline.json`` (fail if the round
+program's FLOPs or HBM bytes bloat more than the recorded tolerance).
 """
 from __future__ import annotations
 
@@ -53,13 +57,24 @@ def check_docs() -> int:
     return r.returncode
 
 
+def check_contracts() -> int:
+    """Compiled-program contracts gate: scripts/flcheck.py --contracts."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "scripts", "flcheck.py"),
+         "--contracts"],
+        cwd=root, text=True)
+    return r.returncode
+
+
 def check_tests(update: bool = False) -> int:
     """Run the tier-1 suite; gate the failure count against the baseline.
 
-    Also runs the doc-sync gate — a green suite with rotten docs still
-    fails."""
+    Also runs the doc-sync and compiled-program contracts gates — a green
+    suite with rotten docs or a bloated round program still fails."""
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     docs_rc = check_docs()
+    contracts_rc = check_contracts()
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(root, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
@@ -83,6 +98,9 @@ def check_tests(update: bool = False) -> int:
         if docs_rc != 0:
             print("doc-sync gate failed (scripts/check_docs.py)")
             return 1
+        if contracts_rc != 0:
+            print("contracts gate failed (scripts/flcheck.py --contracts)")
+            return 1
         return 0
     baseline = 0
     if os.path.exists(BASELINE_PATH):
@@ -94,8 +112,11 @@ def check_tests(update: bool = False) -> int:
     if docs_rc != 0:
         print("doc-sync gate failed (scripts/check_docs.py)")
         return 1
+    if contracts_rc != 0:
+        print("contracts gate failed (scripts/flcheck.py --contracts)")
+        return 1
     print(f"check_bench --tests: ok ({failed} <= baseline {baseline}, "
-          f"docs in sync)")
+          f"docs in sync, contracts hold)")
     return 0
 
 

@@ -18,7 +18,6 @@ docs and config in sync.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 import re
 import subprocess
@@ -28,30 +27,19 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def undocumented_fields() -> list:
-    """Config dataclass fields missing from docs/config.md (backticked)."""
+    """Config dataclass fields missing from docs/config.md (backticked).
+
+    Delegates to the flcheck FLC402 helper (AST-based, never imports the
+    config module) so this gate and ``python scripts/flcheck.py`` cannot
+    disagree about what counts as documented."""
     sys.path.insert(0, os.path.join(ROOT, "src"))
-    from repro.core.config import Config
+    from repro.analysis.lint import ProjectContext, parse_module
+    from repro.analysis.rules.config_rules import undocumented_config_fields
 
-    with open(os.path.join(ROOT, "docs", "config.md")) as f:
-        doc = f.read()
-
-    missing = []
-    seen_types = set()
-
-    def walk(cls, prefix):
-        if cls in seen_types:
-            return
-        seen_types.add(cls)
-        for field in dataclasses.fields(cls):
-            if f"`{field.name}`" not in doc:
-                missing.append(f"{prefix}{field.name}")
-            sub = field.default_factory if field.default_factory is not \
-                dataclasses.MISSING else None
-            if sub is not None and dataclasses.is_dataclass(sub):
-                walk(sub, f"{prefix}{field.name}.")
-
-    walk(Config, "")
-    return missing
+    cfg_path = os.path.join(ROOT, "src", "repro", "core", "config.py")
+    info = parse_module(cfg_path, ROOT)
+    ctx = ProjectContext(root=ROOT, modules=[info] if info else [])
+    return [dotted for dotted, _, _ in undocumented_config_fields(ctx)]
 
 
 def quickstart_snippet() -> str:

@@ -1,0 +1,105 @@
+"""flcheck — JAX-aware static analysis + compiled-program contracts.
+
+Lint layer (AST rules over the source tree):
+
+    PYTHONPATH=src python scripts/flcheck.py              # lint src/repro
+    PYTHONPATH=src python scripts/flcheck.py src tests    # explicit paths
+
+Findings print as ``file:line RULE message (hint: ...)``; exit 1 when any
+survive.  Suppress a finding inline with ``# flcheck: ignore[FLC101]``
+(comma-separate several rule IDs) and a trailing reason; mark a function
+as fast-path-hot with ``# flcheck: hot`` on (or directly above) its def.
+
+Contract layer (compiled batched cohort program):
+
+    PYTHONPATH=src python scripts/flcheck.py --contracts
+    PYTHONPATH=src python scripts/flcheck.py --contracts --update-baseline
+
+Compiles the cohort program and checks the retrace budget, the
+no-host-transfer property of the round HLO, and the roofline
+FLOPs/bytes ratchet against ``scripts/roofline_baseline.json``
+(re-record after an intentional program change with
+``--update-baseline``).  This layer is folded into the tier-1 gate
+(``scripts/check_bench.py --tests``); CI also runs the lint layer on
+every push.  Rule catalog: ``--list-rules`` or ``docs/analysis.md``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import types
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+# Reach repro.analysis without executing repro/__init__ (which imports
+# the whole platform, jax included): the lint layer is pure stdlib and
+# must run in minimal environments such as the CI lint job.  Submodule
+# imports resolve through __path__; only the top-level re-exports are
+# skipped, and the contracts layer imports what it needs directly.
+if "repro" not in sys.modules:
+    _pkg = types.ModuleType("repro")
+    _pkg.__path__ = [os.path.join(ROOT, "src", "repro")]
+    sys.modules["repro"] = _pkg
+
+
+def rule_catalog() -> str:
+    from repro.analysis.rules import RULES
+
+    lines = []
+    for rid in sorted(RULES):
+        r = RULES[rid]
+        lines.append(f"  {rid}  {r.summary}")
+        lines.append(f"          fix: {r.hint}")
+    return "\n".join(lines)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        prog="flcheck",
+        description=__doc__,
+        epilog="rules:\n" + rule_catalog(),
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src/repro)")
+    ap.add_argument("--contracts", action="store_true",
+                    help="run the compiled-program contract layer instead "
+                         "of the AST lint layer")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="with --contracts: re-record "
+                         "scripts/roofline_baseline.json instead of gating")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    args = ap.parse_args()
+
+    if args.list_rules:
+        print(rule_catalog())
+        return 0
+
+    if args.contracts:
+        from repro.analysis.contracts import check_contracts
+
+        report = check_contracts(update_baseline=args.update_baseline)
+        print(report.format())
+        if args.update_baseline:
+            print("flcheck: baseline updated "
+                  "(scripts/roofline_baseline.json)")
+        return 0 if report.ok else 1
+
+    paths = args.paths or [os.path.join(ROOT, "src", "repro")]
+    from repro.analysis.lint import lint_paths
+
+    findings = lint_paths(paths, root=ROOT)
+    for f in findings:
+        print(f.format())
+    if findings:
+        rules = sorted({f.rule for f in findings})
+        print(f"flcheck: {len(findings)} finding(s) [{', '.join(rules)}]")
+        return 1
+    print("flcheck: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

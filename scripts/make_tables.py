@@ -8,7 +8,6 @@ import argparse
 import glob
 import json
 import os
-import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

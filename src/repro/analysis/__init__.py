@@ -1,0 +1,16 @@
+"""flcheck: JAX-aware static analysis for the EasyFL fast path.
+
+Two layers, one CLI (``scripts/flcheck.py``):
+
+* :mod:`repro.analysis.lint` — Python-AST rules over the source tree
+  (host syncs in hot functions, Python control flow on traced values,
+  undonated param-carrying jits, config-validation/doc coverage).  Rule
+  catalog lives in :mod:`repro.analysis.rules`.
+* :mod:`repro.analysis.contracts` — compiled-program contracts for the
+  batched cohort program (retrace budget, no host transfers in the round
+  HLO, roofline FLOPs/bytes ratchet vs ``scripts/roofline_baseline.json``).
+
+See ``docs/analysis.md`` for the rule catalog and suppression syntax.
+"""
+from repro.analysis.lint import Finding, lint_paths  # noqa: F401
+from repro.analysis.rules import RULES  # noqa: F401

@@ -1,0 +1,96 @@
+"""FLC3xx — jit hygiene.
+
+A param-carrying entry point compiled without buffer donation keeps two
+live copies of the model (input + output) across every call; the cohort
+engine's stacked programs donate (``make_cohort_program``'s
+``donate_argnums=(0,)``), and new jit entry points should too — or carry
+a documented suppression when aliasing makes donation unsafe.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional
+
+from repro.analysis.lint import (Finding, ModuleInfo, attr_chain,
+                                 make_finding)
+from repro.analysis.rules import Rule, register
+
+FLC301 = Rule(
+    id="FLC301",
+    summary="jax.jit without donate_argnums on a param-carrying function",
+    hint="pass donate_argnums=/donate_argnames= for the param/state "
+         "buffers, or suppress with a reason when the caller still reads "
+         "the input buffer after the call",
+)
+
+#: parameter names that mark a function as carrying model/optimizer state
+#: (aggregation *weight vectors* are tiny — only model params/opt state
+#: are worth donating, so bare "weights" is deliberately not in here)
+_PARAM_NAMES = {"state", "opt_state"}
+
+
+def _param_carrying(params) -> Optional[str]:
+    for p in params:
+        if "params" in p or p in _PARAM_NAMES:
+            return p
+    return None
+
+
+def _jit_call_without_donate(call: ast.Call) -> bool:
+    chain = attr_chain(call.func)
+    if chain.split(".")[-1] != "jit":
+        return False
+    return not any(kw.arg in ("donate_argnums", "donate_argnames")
+                   for kw in call.keywords)
+
+
+def _deco_jit_without_donate(deco: ast.AST) -> bool:
+    """True for @jax.jit / @jit / @partial(jax.jit, ...) with no donation."""
+    chain = attr_chain(deco)
+    if chain.split(".")[-1] == "jit":
+        return True                    # bare decorator: no kwargs at all
+    if isinstance(deco, ast.Call):
+        fn = attr_chain(deco.func)
+        if fn.split(".")[-1] == "jit":
+            return _jit_call_without_donate(deco)
+        if fn.split(".")[-1] == "partial" and deco.args \
+                and attr_chain(deco.args[0]).split(".")[-1] == "jit":
+            return not any(kw.arg in ("donate_argnums", "donate_argnames")
+                           for kw in deco.keywords)
+    return False
+
+
+@register(FLC301)
+def check_jit_donation(rule: Rule, info: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    # decorated defs
+    for fn in info.functions:
+        carrier = _param_carrying(fn.params)
+        if carrier is None:
+            continue
+        for deco in getattr(fn.node, "decorator_list", []):
+            if _deco_jit_without_donate(deco):
+                out.append(make_finding(
+                    rule, info, deco,
+                    f"jitted '{fn.qualname}' carries '{carrier}' but does "
+                    f"not donate it"))
+                break
+    # jax.jit(f, ...) call sites where f resolves to a local def
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call) \
+                or not _jit_call_without_donate(node) or not node.args:
+            continue
+        target = attr_chain(node.args[0])
+        cands = info.by_name.get(target.split(".")[-1], []) if target else []
+        if len(cands) != 1:
+            continue                   # unresolvable / ambiguous: skip
+        fn = cands[0]
+        if getattr(fn.node, "decorator_list", []):
+            continue                   # decorated defs reported above
+        carrier = _param_carrying(fn.params)
+        if carrier is not None:
+            out.append(make_finding(
+                rule, info, node,
+                f"jax.jit('{fn.qualname}') carries '{carrier}' but does "
+                f"not donate it"))
+    return out

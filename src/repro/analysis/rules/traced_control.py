@@ -1,0 +1,161 @@
+"""FLC2xx — host-side Python constructs inside traced functions.
+
+Inside a jax trace, Python ``if``/``while`` on a traced value raises a
+``TracerBoolConversionError`` at best and silently bakes in one branch at
+worst; wall-clock reads and NumPy RNG calls constant-fold into the
+compiled program, which is almost never what the author meant.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Set
+
+from repro.analysis.lint import (Finding, FuncInfo, ModuleInfo, attr_chain,
+                                 make_finding)
+from repro.analysis.rules import Rule, register
+
+FLC201 = Rule(
+    id="FLC201",
+    summary="Python 'if' on a traced value inside a traced function",
+    hint="use jnp.where / lax.cond / lax.select on traced operands",
+)
+FLC202 = Rule(
+    id="FLC202",
+    summary="Python 'while' on a traced value inside a traced function",
+    hint="use lax.while_loop / lax.fori_loop with a traced condition",
+)
+FLC203 = Rule(
+    id="FLC203",
+    summary="wall-clock read inside a traced function",
+    hint="time outside the program (the value would constant-fold at "
+         "trace time); pass timestamps in as arguments",
+)
+FLC204 = Rule(
+    id="FLC204",
+    summary="np.random call inside a traced function",
+    hint="use jax.random with an explicit key (np.random constant-folds "
+         "to one draw at trace time)",
+)
+
+_CLOCK_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+                "time.process_time", "datetime.now", "datetime.utcnow",
+                "datetime.datetime.now", "datetime.datetime.utcnow"}
+
+
+def _traced_function_for(info: ModuleInfo, node: ast.AST):
+    encl = info.enclosing(node.lineno)
+    return encl[-1] if encl and encl[-1].traced else None
+
+
+def _traced_locals(fn: FuncInfo) -> Set[str]:
+    """Names assigned from expressions that touch jnp/jax/lax values."""
+    traced: Set[str] = set()
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.Assign):
+            continue
+        roots = {attr_chain(c).split(".")[0]
+                 for c in ast.walk(node.value)
+                 if isinstance(c, (ast.Attribute, ast.Name))}
+        if roots & {"jnp", "jax", "lax"}:
+            for tgt in node.targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        traced.add(n.id)
+    return traced
+
+
+def _test_traced_names(test: ast.AST, fn: FuncInfo,
+                       traced_locals: Set[str]) -> List[str]:
+    """Names in a condition that look traced.
+
+    Identity tests (``x is None``) and ``isinstance`` checks are static
+    even on tracers and are excluded, as are attribute reads off a name
+    (``seg.mixer == "attn"``, ``cfg.window``): config/metadata structs
+    ride through traced functions as static Python objects, and genuinely
+    traced attributes (``.shape``, ``.dtype``) are static too."""
+    skip: Set[int] = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and all(
+                isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+            for sub in ast.walk(node):
+                skip.add(id(sub))
+        elif isinstance(node, ast.Call) \
+                and attr_chain(node.func) in ("isinstance", "len",
+                                              "hasattr", "callable"):
+            for sub in ast.walk(node):
+                skip.add(id(sub))
+        elif isinstance(node, ast.Attribute):
+            skip.add(id(node.value))
+    names: List[str] = []
+    for node in ast.walk(test):
+        if id(node) in skip or not isinstance(node, ast.Name):
+            continue
+        if node.id in traced_locals or (
+                node.id in fn.params and node.id not in fn.static_params):
+            names.append(node.id)
+    return names
+
+
+def _control_findings(rule: Rule, info: ModuleInfo,
+                      stmt_type) -> Iterable[Finding]:
+    kw = "if" if stmt_type is ast.If else "while"
+    for node in ast.walk(info.tree):
+        if not isinstance(node, stmt_type):
+            continue
+        fn = _traced_function_for(info, node)
+        if fn is None:
+            continue
+        names = _test_traced_names(node.test, fn, _traced_locals(fn))
+        if names:
+            yield make_finding(
+                rule, info, node,
+                f"'{kw} {'/'.join(sorted(set(names)))}' branches on a "
+                f"traced value inside traced function '{fn.qualname}'")
+
+
+@register(FLC201)
+def check_if_on_traced(rule: Rule, info: ModuleInfo) -> List[Finding]:
+    return list(_control_findings(rule, info, ast.If))
+
+
+@register(FLC202)
+def check_while_on_traced(rule: Rule, info: ModuleInfo) -> List[Finding]:
+    return list(_control_findings(rule, info, ast.While))
+
+
+@register(FLC203)
+def check_clock_in_trace(rule: Rule, info: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = _traced_function_for(info, node)
+        if fn is None:
+            continue
+        chain = attr_chain(node.func)
+        if chain in _CLOCK_CALLS:
+            out.append(make_finding(
+                rule, info, node,
+                f"'{chain}()' inside traced function '{fn.qualname}' "
+                f"freezes to its trace-time value"))
+    return out
+
+
+@register(FLC204)
+def check_np_random_in_trace(rule: Rule, info: ModuleInfo) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(info.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = _traced_function_for(info, node)
+        if fn is None:
+            continue
+        chain = attr_chain(node.func)
+        parts = chain.split(".")
+        if len(parts) >= 3 and parts[0] in ("np", "numpy") \
+                and parts[1] == "random":
+            out.append(make_finding(
+                rule, info, node,
+                f"'{chain}' inside traced function '{fn.qualname}' draws "
+                f"once at trace time, not per call"))
+    return out

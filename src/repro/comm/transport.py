@@ -17,14 +17,13 @@ communication, so switching transports never touches algorithm code —
 """
 from __future__ import annotations
 
-import queue
 import socket
 import socketserver
 import struct
 import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
 
 from repro.comm import serialize
 

@@ -14,7 +14,6 @@ Categories:
 """
 from __future__ import annotations
 
-import threading
 from typing import Any, Callable, Dict, Optional
 
 from repro.core.client import Client

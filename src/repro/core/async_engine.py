@@ -288,7 +288,8 @@ class AsyncEngine:
             # FedBuff-family servers own the weighted application (and any
             # subclass customization of it)
             for e, s in zip(batch, staleness):
-                e.result["_staleness"] = float(s)
+                # staleness is a host np array (virtual-clock bookkeeping)
+                e.result["_staleness"] = float(s)  # flcheck: ignore[FLC102]  -- host np scalar
             self.server.buffered_apply(results)
         else:
             updates = [comp.decompress(r["update"]) for r in results]
@@ -335,7 +336,7 @@ class AsyncEngine:
                     simulated_time=e.finish_time - e.dispatch_time,
                     dispatch_time=e.dispatch_time,
                     finish_time=e.finish_time,
-                    staleness=float(s),
+                    staleness=float(s),  # flcheck: ignore[FLC102]  -- host np scalar
                     **e.result["metrics"])
         return metrics
 

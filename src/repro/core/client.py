@@ -12,11 +12,10 @@ compression stages with error feedback).
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import compression as comp
 from repro.core.config import ClientConfig, validate_optimizer_hparams

@@ -27,7 +27,7 @@ are dense-equivalent after ``decompress`` (sparse wire encoding lives in
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

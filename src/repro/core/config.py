@@ -304,6 +304,10 @@ def validate_fault_config(cfg: "FaultConfig") -> None:
         raise ValueError(
             f"faults.retry_backoff={cfg.retry_backoff!r} is invalid; "
             f"expected a finite float >= 0")
+    if not isinstance(cfg.seed, int):
+        raise ValueError(
+            f"faults.seed={cfg.seed!r} is invalid; expected an int (it "
+            f"seeds the per-(client, round) failure hash)")
 
 
 @dataclass(frozen=True)
@@ -424,6 +428,43 @@ class ResourceConfig:
     round_deadline: float = 0.0
 
 
+def validate_resource_config(cfg: "ResourceConfig") -> None:
+    """Reject unknown engines / out-of-range async knobs at init time.
+
+    Hoisted from ``Trainer.__init__`` so every entry point (including
+    config-only tooling) validates identically; messages are unchanged —
+    tests match on them.
+    """
+    if cfg.execution not in ("sequential", "batched", "async"):
+        raise ValueError(
+            f"unknown execution {cfg.execution!r}; "
+            f"expected 'sequential', 'batched' or 'async'")
+    if cfg.distributed not in ("none", "data"):
+        raise ValueError(
+            f"unknown distributed {cfg.distributed!r}; "
+            f"expected 'none' or 'data'")
+    if cfg.distributed == "data" and cfg.execution != "batched":
+        raise ValueError(
+            'resources.distributed="data" shards the batched engine; '
+            'set resources.execution="batched"')
+    if cfg.buffer_size < 0:
+        raise ValueError(
+            f"resources.buffer_size must be >= 0 (0 = use "
+            f"server.clients_per_round), got {cfg.buffer_size}")
+    if cfg.max_concurrency < 0:
+        raise ValueError(
+            f"resources.max_concurrency must be >= 0 (0 = use "
+            f"server.clients_per_round), got {cfg.max_concurrency}")
+    if cfg.staleness_power < 0:
+        raise ValueError(
+            f"resources.staleness_power must be >= 0 (0 disables the "
+            f"staleness discount), got {cfg.staleness_power}")
+    if not _finite(cfg.round_deadline) or cfg.round_deadline < 0:
+        raise ValueError(
+            f"resources.round_deadline must be a finite float >= 0 "
+            f"(0 = wait forever), got {cfg.round_deadline}")
+
+
 @dataclass(frozen=True)
 class TrackingConfig:
     enabled: bool = True
@@ -452,6 +493,49 @@ class Config:
     @staticmethod
     def make(overrides: Optional[Mapping[str, Any]] = None) -> "Config":
         return merge(Config(), overrides or {})
+
+
+def validate_config(cfg: "Config") -> None:
+    """Validate the whole configuration tree (called by ``Trainer``).
+
+    One entry point touching every ``Config`` section so a bad value fails
+    loudly at construction, not mid-training.  Section validators are
+    idempotent — components that re-validate defensively (``Client``,
+    ``FaultInjector``) raise the same messages.
+    """
+    if not isinstance(cfg.task_id, str) or not cfg.task_id:
+        raise ValueError(
+            f"task_id={cfg.task_id!r} is invalid; expected a non-empty "
+            f"string")
+    if not isinstance(cfg.model, str) or not cfg.model:
+        raise ValueError(
+            f"model={cfg.model!r} is invalid; expected a registered model "
+            f"name")
+    if not isinstance(cfg.seed, int):
+        raise ValueError(f"seed={cfg.seed!r} is invalid; expected an int")
+    if cfg.data.num_clients < 1:
+        raise ValueError(
+            f"data.num_clients={cfg.data.num_clients!r} is invalid; "
+            f"expected an int >= 1")
+    if cfg.data.batch_size < 1:
+        raise ValueError(
+            f"data.batch_size={cfg.data.batch_size!r} is invalid; "
+            f"expected an int >= 1")
+    if cfg.server.rounds < 0:
+        raise ValueError(
+            f"server.rounds={cfg.server.rounds!r} is invalid; expected an "
+            f"int >= 0")
+    if cfg.server.clients_per_round < 1:
+        raise ValueError(
+            f"server.clients_per_round={cfg.server.clients_per_round!r} "
+            f"is invalid; expected an int >= 1")
+    if not cfg.tracking.out_dir:
+        raise ValueError("tracking.out_dir must be a non-empty path")
+    validate_optimizer_hparams(cfg.client)
+    validate_hyperparam_choices(cfg.system_heterogeneity.hyperparam_choices)
+    validate_resource_config(cfg.resources)
+    validate_fault_config(cfg.faults)
+    validate_checkpoint_config(cfg.checkpoint)
 
 
 # ---------------------------------------------------------------------------

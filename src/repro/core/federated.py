@@ -24,8 +24,7 @@ plain ``train_step``; its collective bytes are the paper-technique term the
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

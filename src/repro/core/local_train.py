@@ -16,7 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.small import FLModel
-from repro.optim import Optimizer, apply_updates, get_optimizer
+from repro.optim import Optimizer, apply_updates
 
 
 @lru_cache(maxsize=64)
@@ -34,7 +34,10 @@ def make_client_step(model: FLModel, optimizer: Optimizer,
             loss = loss + 0.5 * proximal_mu * prox
         return loss, metrics
 
-    @jax.jit
+    # donation is unsafe here: on the first call ``global_params`` may
+    # alias the ``params`` buffer (gp defaults to the initial params), and
+    # sequential callers re-read their input trees across rounds
+    @jax.jit  # flcheck: ignore[FLC301]  -- params aliases global_params
     def step(params, opt_state, batch, global_params):
         (loss, metrics), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params, batch, global_params)
@@ -52,7 +55,9 @@ def make_client_step(model: FLModel, optimizer: Optimizer,
 
 @lru_cache(maxsize=64)
 def make_eval_step(model: FLModel):
-    @jax.jit
+    # eval re-applies the same params to every batch — donation would
+    # free the buffer after the first one
+    @jax.jit  # flcheck: ignore[FLC301]  -- params reused across batches
     def step(params, batch):
         _, metrics = model.loss_and_metrics(params, batch)
         return metrics
@@ -71,11 +76,16 @@ def cyclic_batches(n: int, batch_size: int, seed: int):
     return padded.reshape(n_batches, batch_size)
 
 
-def local_train(model: FLModel, params, data_x, data_y, *,
+def local_train(model: FLModel, params, data_x, data_y, *,  # flcheck: hot
                 epochs: int, batch_size: int, optimizer: Optimizer,
                 proximal_mu: float = 0.0, max_grad_norm: float = 0.0,
                 seed: int = 0, global_params=None) -> Tuple[Any, Dict[str, float]]:
-    """Run E local epochs; returns (new_params, mean metrics)."""
+    """Run E local epochs; returns (new_params, mean metrics).
+
+    Per-batch metrics stay on device while the loop dispatches (a
+    ``float()`` per batch would stall the pipeline on every step — the
+    exact footgun flcheck FLC102 exists for); one batched transfer at the
+    end fetches them all."""
     step = make_client_step(model, optimizer, proximal_mu, max_grad_norm)
     opt_state = optimizer.init(params)
     gp = global_params if global_params is not None else params
@@ -85,9 +95,11 @@ def local_train(model: FLModel, params, data_x, data_y, *,
             batch = {"x": jnp.asarray(data_x[bidx]),
                      "y": jnp.asarray(data_y[bidx])}
             params, opt_state, metrics = step(params, opt_state, batch, gp)
-            losses.append(float(metrics["loss"]))
-            accs.append(float(metrics.get("accuracy", np.nan)))
+            losses.append(metrics["loss"])
+            accs.append(metrics.get("accuracy", np.nan))
             n_batches += 1
+    # one transfer for the whole local run, after every step is enqueued
+    losses, accs = jax.device_get((losses, accs))  # flcheck: ignore[FLC101]  -- single end-of-loop fetch
     return params, {
         "loss": float(np.mean(losses)),
         "accuracy": float(np.nanmean(accs)),
@@ -95,8 +107,10 @@ def local_train(model: FLModel, params, data_x, data_y, *,
     }
 
 
-def evaluate(model: FLModel, params, data_x, data_y,
+def evaluate(model: FLModel, params, data_x, data_y,  # flcheck: hot
              batch_size: int = 256) -> Dict[str, float]:
+    """Weighted full-dataset eval; metrics fetched in one end-of-loop
+    transfer (see ``local_train``)."""
     step = make_eval_step(model)
     losses, accs, weights = [], [], []
     for s in range(0, len(data_x), batch_size):
@@ -107,9 +121,10 @@ def evaluate(model: FLModel, params, data_x, data_y,
             xb = np.concatenate([xb, xb[:1].repeat(pad, axis=0)])
             yb = np.concatenate([yb, yb[:1].repeat(pad, axis=0)])
         m = step(params, {"x": jnp.asarray(xb), "y": jnp.asarray(yb)})
-        losses.append(float(m["loss"]))
-        accs.append(float(m["accuracy"]))
+        losses.append(m["loss"])
+        accs.append(m["accuracy"])
         weights.append(min(batch_size, len(data_x) - s))
+    losses, accs = jax.device_get((losses, accs))  # flcheck: ignore[FLC101]  -- single end-of-loop fetch
     w = np.asarray(weights, dtype=np.float64)
     return {"loss": float(np.average(losses, weights=w)),
             "accuracy": float(np.average(accs, weights=w))}

@@ -9,7 +9,6 @@ from communication, so this file contains *no* algorithm logic.
 """
 from __future__ import annotations
 
-import threading
 import time
 from typing import Any, Dict, List, Optional
 

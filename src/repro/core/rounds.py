@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from repro.core.aggregation import weighted_train_loss
 from repro.core.batched import BatchedExecutor
 from repro.core.client import Client
-from repro.core.config import Config, validate_checkpoint_config
+from repro.core.config import Config, validate_config
 from repro.core.server import Server
 from repro.core import compression as comp
 from repro.data.fed_data import FederatedDataset
@@ -96,37 +96,10 @@ class Trainer:
         self.server = server or Server(model, config, fed_data.test)
         self.client_cls = client_cls
         self.clients: Dict[str, Client] = {}
+        # whole-tree validation (repro.core.config.validate_config) — the
+        # resource/checkpoint/fault checks that used to live inline here
         res = config.resources
-        if res.execution not in ("sequential", "batched", "async"):
-            raise ValueError(
-                f"unknown execution {res.execution!r}; "
-                f"expected 'sequential', 'batched' or 'async'")
-        if res.distributed not in ("none", "data"):
-            raise ValueError(
-                f"unknown distributed {res.distributed!r}; "
-                f"expected 'none' or 'data'")
-        if res.distributed == "data" and res.execution != "batched":
-            raise ValueError(
-                'resources.distributed="data" shards the batched engine; '
-                'set resources.execution="batched"')
-        if res.buffer_size < 0:
-            raise ValueError(
-                f"resources.buffer_size must be >= 0 (0 = use "
-                f"server.clients_per_round), got {res.buffer_size}")
-        if res.max_concurrency < 0:
-            raise ValueError(
-                f"resources.max_concurrency must be >= 0 (0 = use "
-                f"server.clients_per_round), got {res.max_concurrency}")
-        if res.staleness_power < 0:
-            raise ValueError(
-                f"resources.staleness_power must be >= 0 (0 disables the "
-                f"staleness discount), got {res.staleness_power}")
-        if not np.isfinite(res.round_deadline) or res.round_deadline < 0:
-            raise ValueError(
-                f"resources.round_deadline must be a finite float >= 0 "
-                f"(0 = wait forever), got {res.round_deadline}")
-        validate_checkpoint_config(config.checkpoint)
-        # validates config.faults loudly (FaultInjector.__post_init__)
+        validate_config(config)
         self.faults = FaultInjector(config.faults)
         if config.faults.active and \
                 config.faults.min_clients_per_round > \
@@ -236,7 +209,7 @@ class Trainer:
         return t
 
     # ------------------------------------------------------------------
-    def _run_batched(self, selected: List[str], payload: Dict[str, Any],
+    def _run_batched(self, selected: List[str], payload: Dict[str, Any],  # flcheck: hot
                      round_id: int,
                      plans: Optional[Dict[str, FaultPlan]] = None,
                      counts: Optional[Dict[str, int]] = None):
@@ -325,10 +298,11 @@ class Trainer:
                 mask = np.ones((len(clients),), np.float32)
                 total_steps = max(int(st["n_steps"][: len(clients)].sum()),
                                   1)
+                steps_f = np.asarray(st["n_steps"], dtype=np.float64)
                 deadline = self.cfg.resources.round_deadline
                 for i, client in enumerate(clients):
                     p = plans[client.client_id]
-                    base = st["wall"] * float(st["n_steps"][i]) / total_steps
+                    base = st["wall"] * steps_f[i] / total_steps
                     eff = self._effective_time(client.client_id, base, p)
                     if p.dropout:
                         mask[i], labels[client.client_id] = 0.0, "dropped"
@@ -366,7 +340,7 @@ class Trainer:
             if plans is not None:
                 # one small host sync (N bools) for rejection accounting —
                 # only when faults are active
-                ok = np.asarray(jax.device_get(st["guard_ok"]))
+                ok = np.asarray(jax.device_get(st["guard_ok"]))  # flcheck: ignore[FLC101]  -- N bools, faults only
                 for i, res in enumerate(results):
                     lab = labels.get(res["client_id"])
                     if lab is None and not ok[i]:
@@ -414,7 +388,7 @@ class Trainer:
         return results, False
 
     # ------------------------------------------------------------------
-    def run_round(self, round_id: int) -> Dict[str, float]:
+    def run_round(self, round_id: int) -> Dict[str, float]:  # flcheck: hot
         if self.cfg.resources.execution == "async":
             raise ValueError(
                 'resources.execution="async" replaces the synchronous round '

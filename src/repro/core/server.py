@@ -10,13 +10,12 @@ and gets client results back; the *scheduling* concern lives in
 """
 from __future__ import annotations
 
-import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import compression as comp
-from repro.core.aggregation import fedavg, get_aggregator
+from repro.core.aggregation import get_aggregator
 from repro.core.config import Config
 from repro.core.local_train import evaluate
 from repro.models.small import FLModel

@@ -11,7 +11,6 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.client import Client
-from repro.core.config import Config
 
 
 class FedProxClient(Client):

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 from typing import List, Sequence
 
-import numpy as np
 
 from repro.core.server import Server
 

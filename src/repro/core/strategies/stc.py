@@ -21,7 +21,6 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
-import jax
 
 from repro.core import compression as comp
 from repro.core.client import Client

@@ -8,8 +8,8 @@ mirroring the paper's API (Table II).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterator, List, Optional
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterator, List
 
 import numpy as np
 

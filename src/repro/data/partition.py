@@ -74,7 +74,7 @@ def class_partition(labels: np.ndarray, n_clients: int,
         placed = False
         order = rng.permutation(n_clients)
         # prefer clients that already own class c, then clients with < k classes
-        for cid in sorted(order, key=lambda i: (c not in client_classes[i],
+        for cid in sorted(order, key=lambda i, c=c: (c not in client_classes[i],
                                                 len(client_idx[i]))):
             if c in client_classes[cid] or len(client_classes[cid]) < k:
                 client_idx[cid].extend(part.tolist())

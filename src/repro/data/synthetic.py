@@ -17,7 +17,7 @@ learn them, non-IID partitions degrade accuracy, sample counts match.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Optional
 
 import numpy as np
 

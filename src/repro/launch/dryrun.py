@@ -17,7 +17,6 @@ import dataclasses
 import json
 import time
 import traceback
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +46,6 @@ def build_state_specs(model: Model, optimizer, mesh, rules):
     """(abstract TrainState, NamedSharding tree) without allocation."""
     params_abs = model.abstract()
     params_pspec = partition_specs(model.defs(), rules, _mesh_shape_dict(mesh))
-    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
 
     def _init(params):
         return TrainState(params, optimizer.init(params),
@@ -61,7 +59,6 @@ def build_state_specs(model: Model, optimizer, mesh, rules):
         state_abs.opt_state,
         is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
     if flat_o and len(flat_o) % len(flat_p) == 0:
-        reps = len(flat_o) // len(flat_p)
         opt_flat = []
         for i, leaf in enumerate(flat_o):
             cand = flat_p[i % len(flat_p)]
@@ -95,7 +92,6 @@ def _bytes_per_device(abstract_tree, sharding_tree) -> int:
     for a, s in zip(leaves_a, leaves_s):
         n = a.size * a.dtype.itemsize
         try:
-            shards = s.num_devices // len(s.device_set) if False else 1
             shard_shape = s.shard_shape(a.shape)
             sn = 1
             for d in shard_shape:

@@ -33,15 +33,10 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
-}
-
-_SHAPE_RE = re.compile(
-    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
-    r"c64|c128)\[([\d,]*)\]")
+# dtype widths + shape parsing shared with roofline.py (hlo_types is the
+# single copy; private aliases keep this module's call sites stable)
+from repro.launch.hlo_types import SHAPE_RE as _SHAPE_RE
+from repro.launch.hlo_types import shape_bytes as _type_bytes
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
@@ -73,17 +68,6 @@ _HEAVY_OPS = {"dot", "convolution", "sort", "scatter", "gather",
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+?)\s+"
                        r"([\w\-]+)\((.*?)\)(.*)$")
 _HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s+\(.*\)\s*->\s*.+\s*\{")
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        n = 1
-        for d in m.group(2).split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[m.group(1)]
-    return total
 
 
 def _dims(type_str: str) -> Optional[List[int]]:

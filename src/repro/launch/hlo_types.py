@@ -1,0 +1,36 @@
+"""Single source of truth for HLO scalar byte widths + shape parsing.
+
+Both HLO analyzers (``launch/roofline.py`` — collective-bytes parsing —
+and ``launch/hlo_analysis.py`` — the call-graph cost model) consume the
+same post-optimization HLO text, so they must agree on how many bytes an
+``f32[256,512]`` is.  They used to carry private copies of this table and
+drifted (roofline's was missing the complex types); this module is the
+one copy they now share.
+"""
+from __future__ import annotations
+
+import re
+
+#: bytes per element for every scalar type the XLA printer emits
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+#: matches one "dtype[dims]" shape; tuples match once per element
+SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred|"
+    r"c64|c128)\[([\d,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO result type (handles tuples)."""
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * DTYPE_BYTES[m.group(1)]
+    return total

@@ -19,10 +19,9 @@ layers!) by the loop trip count recovered from the loop-condition constant.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 PEAK_FLOPS = 197e12          # bf16 / chip
 HBM_BW = 819e9               # B/s / chip
@@ -32,27 +31,9 @@ DCN_BW = 12.5e9              # B/s / chip effective inter-pod (data-center NIC)
 COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
-}
-
-_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
-                       r"s16|u16|s8|u8|pred)\[([\d,]*)\]")
-
-
-def _shape_bytes(type_str: str) -> int:
-    """Total bytes of an HLO result type (handles tuples)."""
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        n = 1
-        for d in dims.split(","):
-            if d:
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
+# dtype widths + shape parsing shared with hlo_analysis.py (hlo_types is
+# the single copy; private aliases keep this module's call sites stable)
+from repro.launch.hlo_types import shape_bytes as _shape_bytes  # noqa: E402
 
 
 @dataclass

@@ -18,9 +18,8 @@ from __future__ import annotations
 
 import argparse
 import json
-import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 from repro.comm.transport import RPCServer, SocketTransport
 from repro.deploy.discovery import Registry

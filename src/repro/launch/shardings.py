@@ -6,10 +6,9 @@ the same model with a different distribution strategy.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical -> tuple of mesh axes (applied where divisible, else replicated)

@@ -14,7 +14,6 @@ is also the driver ``examples/llm_federated.py`` builds on.
 from __future__ import annotations
 
 import argparse
-import os
 import time
 
 import jax

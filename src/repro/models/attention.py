@@ -19,9 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import ArchConfig
-from repro.models.layers import (
-    ParamDef, apply_rope, ones_init, zeros_init, normal_init,
-)
+from repro.models.layers import ParamDef, apply_rope, zeros_init
 
 NEG_INF = -1e30
 
@@ -112,7 +110,7 @@ def _plain_attention(q, k, v, mask):
     score matmuls across the whole mesh (measured: paligemma train_4k ran
     attention at global batch per chip — EXPERIMENTS.md §Perf pair B)."""
     import os
-    from repro.models.sharding import hint, resolve_spec
+    from repro.models.sharding import hint
     # When K·G shards over "model" (most GQA archs) XLA propagation does the
     # right thing on its own — forcing hints there REGRESSES (glm4 collective
     # 7.2 -> 23.9 s, §Perf pair B iteration log).  Only the fallback case
@@ -205,7 +203,6 @@ def _project_qkv(cfg, p, x, positions):
 
 def gqa_attention(cfg: ArchConfig, p, x, positions, *, window: int = 0):
     """Training/prefill self-attention.  x: (B,S,d) -> (B,S,d), plus (k,v)."""
-    from repro.models.sharding import resolve_spec
     B, S, _ = x.shape
     K = cfg.n_kv_heads
     G = cfg.n_heads // K
@@ -297,7 +294,6 @@ def _mla_q(cfg, p, x, positions):
 
 def _mla_latent(cfg, p, x, positions):
     from repro.models.layers import rmsnorm
-    m = cfg.mla
     dt = x.dtype
     c = rmsnorm(jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt)), p["kv_norm"])
     k_rope = jnp.einsum("bsd,df->bsf", x, p["w_kr"].astype(dt))
@@ -334,7 +330,6 @@ def mla_decode(cfg: ArchConfig, p, x, c_cache, kr_cache, cache_mask, positions):
     out    = (probs·c) @ W_uv @ W_o                      (absorb W_uv)
     """
     m = cfg.mla
-    B = x.shape[0]
     dt = x.dtype
     q_nope, q_rope = _mla_q(cfg, p, x, positions)          # (B,1,H,*)
     c_new, kr_new = _mla_latent(cfg, p, x, positions)      # (B,1,r), (B,1,f)

@@ -14,7 +14,6 @@ MLA caches the compressed latent + shared RoPE key instead of per-head K/V
 """
 from __future__ import annotations
 
-from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ launcher (assigned LLM architectures, multi-pod meshes) program against.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ Qwen3 convention); load-balance auxiliary loss per Switch Transformer.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -18,7 +18,6 @@ Decode is the O(1) recurrence — this is why rwkv6 runs ``long_500k``.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

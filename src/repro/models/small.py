@@ -15,7 +15,6 @@ All three expose the same functional interface used by the FL runtime:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Any, Callable, Dict, Tuple
 
 import jax
@@ -67,7 +66,6 @@ def _conv(x, w, b, stride=1, padding="SAME"):
 
 
 def _conv_def(k, cin, cout):
-    init = normal_init(1.0)
     def he(key, shape, dtype):
         fan_in = shape[0] * shape[1] * shape[2]
         return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)).astype(dtype)
@@ -146,8 +144,6 @@ def _lstm_def(din, dh):
 
 
 def _lstm(p, x, h0, c0):
-    dh = h0.shape[-1]
-
     def cell(carry, xt):
         h, c = carry
         z = xt @ p["wx"] + h @ p["wh"] + p["b"]

@@ -15,7 +15,7 @@ Three entry points per model:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +27,7 @@ from repro.models import mlp as mlp_mod
 from repro.models import moe as moe_mod
 from repro.models import rglru as rglru_mod
 from repro.models import rwkv6 as rwkv_mod
-from repro.models.layers import (
-    ParamDef, apply_norm, init_params, is_paramdef_leaf, norm_defs, normal_init,
-)
+from repro.models.layers import ParamDef, apply_norm, is_paramdef_leaf, norm_defs, normal_init
 from repro.models.sharding import hint
 
 Params = Dict[str, Any]
@@ -206,7 +204,6 @@ def _run_segment(cfg: ArchConfig, seg: Segment, seg_params, x, positions,
 def _encoder_forward(cfg: ArchConfig, params, frames, remat: bool):
     enc = params["encoder"]
     x = frames + enc["pos_embed"][None, : frames.shape[1]].astype(frames.dtype)
-    enc_seg = Segment("attn", "dense", cfg.encoder_layers, 0)
 
     def body(carry, layer_params):
         h = apply_norm(cfg, layer_params["norm1"], carry)
@@ -308,7 +305,6 @@ def loss_fn(cfg: ArchConfig, params, batch, remat: bool = True):
 
 def _seg_cache_specs(cfg: ArchConfig, seg: Segment, batch: int, length: int,
                      ring: bool, dtype):
-    hd = cfg.resolved_head_dim
     if seg.mixer == "attn":
         L = cfg.decode_window if ring else length
         base = kvc.attn_cache_defs(cfg, batch, L, dtype)
@@ -443,7 +439,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, ring: bool = False)
     new_seg_caches = []
     for seg, seg_params, seg_cache in zip(segments(cfg), params["segments"],
                                           cache["segments"]):
-        def body(carry, xs):
+        def body(carry, xs, seg=seg):
             xc = carry
             layer_params, layer_cache, layer_enc = xs
             x_new, c_new = _decode_layer(cfg, seg, layer_params, xc,
@@ -455,7 +451,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, ring: bool = False)
                                              seg.first_layer + seg.count],
                    "v": cache["enc_kv"]["v"][seg.first_layer:
                                              seg.first_layer + seg.count]}
-            def body_enc(carry, xs):
+            def body_enc(carry, xs, seg=seg):
                 layer_params, layer_cache, ek, ev = xs
                 x_new, c_new = _decode_layer(cfg, seg, layer_params, carry,
                                              layer_cache, pos, ring, (ek, ev))
@@ -463,7 +459,7 @@ def decode_step(cfg: ArchConfig, params, cache, tokens, pos, ring: bool = False)
             x, new_cache = jax.lax.scan(
                 body_enc, x, (seg_params, seg_cache, enc["k"], enc["v"]))
         else:
-            def body_plain(carry, xs):
+            def body_plain(carry, xs, seg=seg):
                 layer_params, layer_cache = xs
                 x_new, c_new = _decode_layer(cfg, seg, layer_params, carry,
                                              layer_cache, pos, ring, None)

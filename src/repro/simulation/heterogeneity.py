@@ -24,7 +24,7 @@ so heterogeneity never forces the sequential engine.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict
 
 import numpy as np
 

@@ -1,0 +1,23 @@
+"""flcheck fixture: FLC101/FLC102 clean twins. Never imported."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_step(updates, metrics):  # flcheck: hot
+    losses = jnp.stack(metrics)
+    fetched = jax.device_get(losses)  # flcheck: ignore[FLC101]  -- one batched end-of-round fetch
+    return fetched
+
+
+def per_client(metrics, scale: float):  # flcheck: hot
+    count = 0
+    for _ in metrics:
+        count += 1
+    # annotated scalar param + constant-initialized counter: both host
+    return float(scale), float(count)
+
+
+def host_helper(x):
+    # neither hot nor traced: np.asarray is fine here
+    return np.asarray(x)

@@ -1,0 +1,25 @@
+"""flcheck fixture: FLC101/FLC102 firing cases. Never imported."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def round_step(updates, metrics):  # flcheck: hot
+    jax.block_until_ready(updates)            # FLC101
+    loss = jax.device_get(metrics)            # FLC101
+    first = loss.item()                       # FLC101
+    return first
+
+
+def per_client(metrics):  # flcheck: hot
+    out = []
+    for m in metrics:
+        out.append(float(m))                  # FLC102
+    total = metrics.sum
+    return out, int(total)                    # FLC102
+
+
+@jax.jit
+def traced_mix(x):
+    y = np.asarray(x)                         # FLC102 (under trace)
+    return jnp.sum(y)

@@ -1,0 +1,26 @@
+"""flcheck fixture: FLC301 clean twins. Never imported."""
+from functools import partial
+
+import jax
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def apply_update(params, update):            # donated: clean
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, update)
+
+
+@jax.jit
+def measure(batch, labels):                  # carries no params: clean
+    return batch, labels
+
+
+@jax.jit  # flcheck: ignore[FLC301]  -- caller re-reads params after the call
+def shared_params_step(params, batch):
+    return params, batch
+
+
+def _agg(state, new):
+    return state
+
+
+agg = jax.jit(_agg, donate_argnums=(0,))     # donated call site: clean

@@ -1,0 +1,21 @@
+"""flcheck fixture: FLC301 firing cases. Never imported."""
+from functools import partial
+
+import jax
+
+
+@jax.jit
+def apply_update(params, update):            # FLC301 (bare decorator)
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, update)
+
+
+@partial(jax.jit, static_argnames=("n",))
+def opt_step(opt_state, grads, n):           # FLC301 (partial, no donate)
+    return opt_state
+
+
+def _agg(state, new):
+    return state
+
+
+agg = jax.jit(_agg)                          # FLC301 (call site)

@@ -1,0 +1,22 @@
+"""flcheck fixture: FLC201-FLC204 clean twins. Never imported."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branchless(x, flag=None, cfg=None):
+    if flag is None:                 # identity test: static, clean
+        flag = 0
+    if cfg is not None and cfg.window:   # attribute read: static metadata
+        x = x[: cfg.window]
+    y = jnp.where(x > 0, x, -x)      # device-side select, clean
+    return y + flag
+
+
+def host_loop(xs):
+    t0 = time.time()                 # not traced: wall clock is fine
+    while xs:                        # not traced: Python loop is fine
+        xs = xs[:-1]
+    return time.time() - t0

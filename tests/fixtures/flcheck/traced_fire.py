@@ -1,0 +1,23 @@
+"""flcheck fixture: FLC201-FLC204 firing cases. Never imported."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def branchy(x):
+    y = jnp.abs(x)
+    if y > 0:                        # FLC201
+        return y
+    while x > 0:                     # FLC202
+        x = x - 1
+    return x
+
+
+@jax.jit
+def clocked(x):
+    t = time.time()                  # FLC203
+    noise = np.random.rand(4)        # FLC204
+    return x + t + noise

@@ -1,5 +1,4 @@
 """Attention correctness: chunked==plain, windowing, MLA absorbed decode."""
-import math
 
 import jax
 import jax.numpy as jnp

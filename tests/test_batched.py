@@ -13,9 +13,7 @@ import pytest
 
 import repro as easyfl
 from repro.kernels import ops, ref
-from repro.kernels.fedavg_agg import (
-    TILE_D, TILE_N, bucket_clients, pad_cohort,
-)
+from repro.kernels.fedavg_agg import TILE_N, bucket_clients, pad_cohort
 
 
 # ---------------------------------------------------------------------------

@@ -4,13 +4,10 @@ FedAvg-ing the deltas by hand."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_arch
-from repro.core.federated import (
-    FedRoundConfig, FedState, init_fed_state, make_fed_round_step,
-)
-from repro.models.model import Model, TrainState, init_train_state
+from repro.core.federated import FedRoundConfig, init_fed_state, make_fed_round_step
+from repro.models.model import Model, init_train_state
 from repro.optim import sgd
 
 

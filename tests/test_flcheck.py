@@ -1,0 +1,275 @@
+"""flcheck: AST rules (firing + clean-twin fixtures), project rules on
+synthetic config trees, CLI behavior, and the compiled-program contracts
+(retrace budget + roofline ratchet demonstrably trip).
+
+The fixture corpus lives in ``tests/fixtures/flcheck/`` — real files, so
+the suite also proves the fixtures stay syntactically valid.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis import RULES, lint_paths
+from repro.analysis import contracts
+from repro.analysis.lint import ProjectContext, find_root, parse_module
+from repro.analysis.rules.config_rules import undocumented_config_fields
+
+REPO = Path(__file__).resolve().parent.parent
+FIXTURES = Path(__file__).resolve().parent / "fixtures" / "flcheck"
+
+
+def lint_fixture(name: str):
+    return lint_paths([str(FIXTURES / name)], root=str(FIXTURES),
+                      project_rules=False)
+
+
+def rule_counts(findings):
+    out = {}
+    for f in findings:
+        out[f.rule] = out.get(f.rule, 0) + 1
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule catalog
+# ---------------------------------------------------------------------------
+
+
+def test_rule_catalog_complete():
+    expected = {"FLC101", "FLC102", "FLC201", "FLC202", "FLC203",
+                "FLC204", "FLC301", "FLC401", "FLC402"}
+    assert expected <= set(RULES)
+    assert len(set(RULES)) >= 8
+    for rule in RULES.values():
+        assert rule.id and rule.summary and rule.hint
+
+
+# ---------------------------------------------------------------------------
+# host-sync rules (FLC101/FLC102)
+# ---------------------------------------------------------------------------
+
+
+def test_host_sync_fires():
+    counts = rule_counts(lint_fixture("host_sync_fire.py"))
+    assert counts.get("FLC101") == 3      # block_until_ready, device_get, .item()
+    assert counts.get("FLC102") == 3      # float(), int(), np.asarray-in-trace
+
+
+def test_host_sync_clean_twin():
+    assert lint_fixture("host_sync_clean.py") == []
+
+
+def test_findings_format():
+    f = lint_fixture("host_sync_fire.py")[0]
+    line = f.format()
+    assert line.startswith(f"{f.path}:{f.line} {f.rule} ")
+    assert "(hint: " in line
+
+
+# ---------------------------------------------------------------------------
+# traced-control rules (FLC201-FLC204)
+# ---------------------------------------------------------------------------
+
+
+def test_traced_control_fires():
+    counts = rule_counts(lint_fixture("traced_fire.py"))
+    assert counts.get("FLC201") == 1
+    assert counts.get("FLC202") == 1
+    assert counts.get("FLC203") == 1
+    assert counts.get("FLC204") == 1
+
+
+def test_traced_control_clean_twin():
+    assert lint_fixture("traced_clean.py") == []
+
+
+# ---------------------------------------------------------------------------
+# jit hygiene (FLC301)
+# ---------------------------------------------------------------------------
+
+
+def test_jit_donation_fires():
+    findings = lint_fixture("jit_fire.py")
+    assert rule_counts(findings).get("FLC301") == 3
+    assert {f.rule for f in findings} == {"FLC301"}
+
+
+def test_jit_donation_clean_twin():
+    # includes a documented '# flcheck: ignore[FLC301]' suppression
+    assert lint_fixture("jit_clean.py") == []
+
+
+# ---------------------------------------------------------------------------
+# config contracts (FLC401/FLC402) on a synthetic tree
+# ---------------------------------------------------------------------------
+
+CONFIG_FIRE = '''\
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    dropout_prob: float = 0.0
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class Config:
+    task_id: str = "task"
+    faults: FaultConfig = field(default_factory=FaultConfig)
+
+
+def validate_fault_config(cfg):
+    if not 0 <= cfg.dropout_prob <= 1:
+        raise ValueError("dropout_prob")
+
+
+def validate_config(cfg):
+    if not cfg.task_id:
+        raise ValueError("task_id")
+    validate_fault_config(cfg.faults)
+'''
+
+CONFIG_CLEAN = CONFIG_FIRE.replace(
+    '        raise ValueError("dropout_prob")\n',
+    '        raise ValueError("dropout_prob")\n'
+    '    if not isinstance(cfg.seed, int):\n'
+    '        raise ValueError("seed")\n')
+
+DOC_FIRE = "`task_id` `faults` `dropout_prob`\n"
+DOC_CLEAN = DOC_FIRE.rstrip() + " `seed`\n"
+
+
+def _config_tree(tmp_path, config_src, doc):
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "config.md").write_text(doc)
+    core = tmp_path / "src" / "core"
+    core.mkdir(parents=True)
+    (core / "config.py").write_text(config_src)
+    return tmp_path / "src"
+
+
+def test_config_rules_fire(tmp_path):
+    src = _config_tree(tmp_path, CONFIG_FIRE, DOC_FIRE)
+    findings = lint_paths([str(src)], root=str(tmp_path))
+    counts = rule_counts(findings)
+    assert counts.get("FLC401") == 1      # FaultConfig.seed unvalidated
+    assert counts.get("FLC402") == 1      # FaultConfig.seed undocumented
+    assert all("seed" in f.message for f in findings)
+
+
+def test_config_rules_clean_twin(tmp_path):
+    src = _config_tree(tmp_path, CONFIG_CLEAN, DOC_CLEAN)
+    assert lint_paths([str(src)], root=str(tmp_path)) == []
+
+
+def test_undocumented_fields_helper_matches_repo():
+    """The shared helper (used by scripts/check_docs.py) is clean on the
+    real tree — the doc gate and FLC402 see the same source of truth."""
+    info = parse_module(str(REPO / "src" / "repro" / "core" / "config.py"),
+                        str(REPO))
+    ctx = ProjectContext(root=str(REPO), modules=[info])
+    assert undocumented_config_fields(ctx) == []
+
+
+def test_repo_tree_is_flcheck_clean():
+    assert lint_paths([str(REPO / "src" / "repro")], root=str(REPO)) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions + hot markers
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_and_hot_marker(tmp_path):
+    p = tmp_path / "mod.py"
+    p.write_text(
+        "import jax\n\n\n"
+        "def fetch(xs):  # flcheck: hot\n"
+        "    return jax.device_get(xs)\n\n\n"
+        "def fetch_ok(xs):  # flcheck: hot\n"
+        "    return jax.device_get(xs)  # flcheck: ignore[FLC101]  -- why\n")
+    findings = lint_paths([str(p)], root=str(tmp_path),
+                          project_rules=False)
+    assert [f.rule for f in findings] == ["FLC101"]
+    assert findings[0].line == 5          # only the unsuppressed sync
+
+
+def test_find_root_locates_repo():
+    assert find_root(str(FIXTURES)) == str(REPO)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*args):
+    return subprocess.run(
+        [sys.executable, str(REPO / "scripts" / "flcheck.py"), *args],
+        capture_output=True, text=True, cwd=str(REPO))
+
+
+def test_cli_exit_codes():
+    bad = _run_cli(str(FIXTURES / "jit_fire.py"))
+    assert bad.returncode == 1
+    assert "FLC301" in bad.stdout
+    good = _run_cli(str(FIXTURES / "jit_clean.py"))
+    assert good.returncode == 0, good.stdout + good.stderr
+
+
+def test_cli_self_documenting():
+    r = _run_cli("--help")
+    assert r.returncode == 0
+    for rule_id in RULES:
+        assert rule_id in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# layer 2: compiled-program contracts
+# ---------------------------------------------------------------------------
+
+
+def test_contracts_hold_on_current_program():
+    report = contracts.check_contracts()
+    assert report.ok, report.format()
+    assert report.retraces == 0
+    assert report.host_transfer_ops == []
+    assert report.baseline is not None
+
+
+def test_contracts_gate_trips(tmp_path):
+    """One compile, two corrupted gates: a zero trace budget and a
+    baseline recorded for a far smaller program must both be violations."""
+    bogus = tmp_path / "baseline.json"
+    bogus.write_text(json.dumps(
+        {"flops": 1.0, "hbm_bytes": 1.0, "tolerance": 0.15}))
+    report = contracts.check_contracts(baseline_path=str(bogus),
+                                       trace_budget=0)
+    assert not report.ok
+    joined = "\n".join(report.violations)
+    assert "retrace budget" in joined
+    assert "roofline ratchet" in joined
+    assert "flops" in joined and "hbm_bytes" in joined
+    assert "FAILED" in report.format()
+
+
+def test_contracts_missing_baseline_is_a_violation(tmp_path):
+    report = contracts.check_contracts(
+        baseline_path=str(tmp_path / "nope.json"))
+    assert not report.ok
+    assert any("no roofline baseline" in v for v in report.violations)
+
+
+def test_committed_baseline_matches_fixed_shapes():
+    with open(os.path.join(str(REPO), "scripts",
+                           "roofline_baseline.json")) as f:
+        base = json.load(f)
+    assert base["program"]["clients"] == contracts.N_CLIENTS
+    assert base["program"]["local_steps"] == contracts.LOCAL_STEPS
+    assert base["tolerance"] == contracts.TOLERANCE
+    assert base["flops"] > 0 and base["hbm_bytes"] > 0

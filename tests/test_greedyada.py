@@ -1,5 +1,4 @@
 """Property tests for GreedyAda (paper Algorithm 1, Eq. 1)."""
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 

@@ -3,7 +3,6 @@ hypothesis shape/dtype sweeps as required for every kernel."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

@@ -1,12 +1,8 @@
 """Property tests for statistical-heterogeneity partitioners (paper §V-A)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.data.partition import (
-    apply_sizes, class_partition, dirichlet_partition, iid_partition,
-    partition, unbalanced_sizes,
-)
+from repro.data.partition import class_partition, dirichlet_partition, iid_partition, partition, unbalanced_sizes
 
 
 def _labels(n, k, seed):

@@ -1,6 +1,5 @@
 """Wire-protocol roundtrip properties (paper Fig. 4a Protocol tier)."""
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

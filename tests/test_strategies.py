@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.client import Client
-from repro.core.config import ClientConfig, Config, DataConfig
+from repro.core.config import ClientConfig, DataConfig
 from repro.core.strategies import FedProxClient, FedReIDClient, STCClient
 from repro.data import ClientData, build_federated_data
 from repro.models.registry import get_model

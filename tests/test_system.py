@@ -142,7 +142,6 @@ def test_remote_training_socket_roundtrip():
 
 
 def test_register_external_dataset():
-    import jax
     from repro.data import ClientData, FederatedDataset
 
     rng = np.random.RandomState(0)

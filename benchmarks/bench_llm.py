@@ -1,0 +1,108 @@
+"""Federated LLM fine-tuning: LoRA vs full-delta rounds at cohort scale.
+
+Measures, per cohort size N ∈ {20} on a small decoder transformer
+(2 layers, d_model 128 — big enough that adapters are a small fraction
+of the base; the registered ``tiny_lm`` token dataset feeds it):
+
+* round wall time on the batched engine under ``client.finetune =
+  "full"`` (the whole parameter tree is the per-client delta) vs
+  ``"lora"`` (rank-2 adapters only, frozen base hoisted into the
+  program as constants) — compile warm-up excluded;
+* ``comm_up_bytes`` for the timed round under both modes.  Byte
+  accounting is deterministic (stacked global-tree leaves × 4 bytes),
+  so ``scripts/check_bench.py`` gates the LoRA/full ratio — adapters
+  must stay under 5% of the full-delta payload.
+
+``collect()`` returns the numbers for ``benchmarks/run.py --json``
+regression mode.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable
+
+NS = (20,)
+RANK = 2
+
+
+def _bench_model():
+    """A d_model-128 decoder: small enough for CPU rounds in seconds,
+    big enough that rank-2 adapters are ~3% of the base tree."""
+    from repro.core.config import ArchConfig
+    from repro.models.llm import transformer_lm
+
+    arch = ArchConfig(
+        name="bench_lm", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=256, vocab=128, max_seq_len=16, dtype="float32")
+    return transformer_lm(arch)
+
+
+def _make_trainer(finetune: str, n: int, model=None):
+    import jax
+
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.core.server import Server
+    from repro.data.fed_data import build_federated_data
+
+    cfg = Config.make({
+        "model": "tiny_lm",      # name only; the bench model is passed in
+        "data": {"dataset": "tiny_lm", "num_clients": n, "batch_size": 32},
+        "server": {"rounds": 2, "clients_per_round": n, "test_every": 0},
+        "client": {"local_epochs": 1, "lr": 0.1, "finetune": finetune,
+                   "lora_rank": RANK},
+        "resources": {"execution": "batched"},
+        "tracking": {"enabled": False},
+    })
+    model = model if model is not None else _bench_model()
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test))
+    # trainer.model is the LoRA wrapper under finetune="lora" (adapters
+    # are the trainable tree), the base model itself under "full"
+    trainer.server.params = trainer.model.init(jax.random.PRNGKey(cfg.seed))
+    return trainer
+
+
+def _round(finetune: str, n: int, model=None) -> Dict[str, float]:
+    trainer = _make_trainer(finetune, n, model=model)
+    trainer.run_round(0)                      # warm-up (compile)
+    t0 = time.perf_counter()
+    metrics = trainer.run_round(1)
+    return {"roundtime_s": time.perf_counter() - t0,
+            "bytes": metrics["comm_up_bytes"]}
+
+
+def collect(ns: Iterable[int] = NS) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {"llm_full_roundtime": {}, "llm_lora_roundtime": {},
+                            "llm_full_bytes": {}, "llm_lora_bytes": {}}
+    model = _bench_model()                    # shared base across both modes
+    for n in ns:
+        full = _round("full", n, model=model)
+        lora = _round("lora", n, model=model)
+        out["llm_full_roundtime"][str(n)] = full["roundtime_s"]
+        out["llm_lora_roundtime"][str(n)] = lora["roundtime_s"]
+        out["llm_full_bytes"][str(n)] = full["bytes"]
+        out["llm_lora_bytes"][str(n)] = lora["bytes"]
+    return out
+
+
+def main() -> None:
+    data = collect()
+    rows = []
+    for n in sorted(data["llm_full_roundtime"], key=int):
+        full_t = data["llm_full_roundtime"][n]
+        lora_t = data["llm_lora_roundtime"][n]
+        full_b = data["llm_full_bytes"][n]
+        lora_b = data["llm_lora_bytes"][n]
+        rows.append((f"llm_roundtime_full_s_N{n}", full_t, ""))
+        rows.append((f"llm_roundtime_lora_s_N{n}", lora_t,
+                     f"{full_t / lora_t:.1f}x vs full-delta"))
+        rows.append((f"llm_bytes_full_N{n}", full_b, ""))
+        rows.append((f"llm_bytes_lora_N{n}", lora_b,
+                     f"{lora_b / full_b:.1%} of full-delta wire bytes"))
+    from benchmarks.common import emit
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

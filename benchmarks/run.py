@@ -35,6 +35,8 @@ BENCHES = [
      "Async FedBuff event loop vs synchronous rounds (simulated wall-clock)"),
     ("faults", "benchmarks.bench_faults",
      "Fault injection: zero-overhead when off, degraded-round throughput"),
+    ("llm", "benchmarks.bench_llm",
+     "Federated LLM fine-tuning: LoRA vs full-delta round time + wire bytes"),
     ("roofline", "benchmarks.bench_roofline", "§Roofline table from dry-run"),
 ]
 
@@ -43,10 +45,12 @@ def run_json(path: str) -> None:
     """Regression mode: emit sequential/batched round-time, aggregation,
     and compressed in-program-vs-gathering round numbers as JSON
     (consumed by scripts/check_bench.py)."""
-    from benchmarks import bench_batched, bench_compression, bench_faults
+    from benchmarks import (bench_batched, bench_compression, bench_faults,
+                            bench_llm)
     data = bench_batched.collect()
     data.update(bench_compression.collect_rounds())
     data.update(bench_faults.collect())
+    data.update(bench_llm.collect())
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"# wrote {path}")

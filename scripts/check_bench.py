@@ -12,7 +12,10 @@ faster than the gathering path at N >= 50, or if a batched round with the
 fault layer configured but inactive is more than ``FAULTS_OFF_NOISE``
 slower than the plain batched round (zero-overhead contract).  Small
 cohorts are reported but not gated (dispatch overhead there is
-noise-level).
+noise-level).  The federated-LLM LoRA numbers (``benchmarks/bench_llm``)
+are gated at **every** measured cohort size: wire bytes are
+deterministic accounting, not timing, so adapters must stay under
+``LORA_BYTES_FRAC`` of the full-delta payload unconditionally.
 
 Test-baseline mode ("no worse than seed", mechanically):
 
@@ -43,6 +46,9 @@ GATE_MIN_N = 50
 # faults-off batched round may be at most this much slower than the plain
 # batched round (zero-overhead contract; headroom is timing noise only)
 FAULTS_OFF_NOISE = 1.25
+# LoRA wire bytes must stay under this fraction of the full-delta payload
+# (deterministic byte accounting — gated at every measured cohort size)
+LORA_BYTES_FRAC = 0.05
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "test_baseline.json")
@@ -180,6 +186,25 @@ def check(data: dict) -> int:
         print(f"faults-off N={n}: batched={base:.4f}s "
               f"faults_off={off:.4f}s ({ratio:.2f}x) [{status}]")
         if gated and not ok:
+            failures += 1
+    # federated LLM fine-tuning: LoRA adapters must be a small fraction of
+    # the full-delta wire payload.  Bytes are deterministic (stacked
+    # global-tree leaves x 4B), so this is gated at every cohort size —
+    # a ratio drift means the adapter tree leaked base-sized leaves.
+    for n in sorted(data.get("llm_lora_bytes", {}), key=int):
+        lora = data["llm_lora_bytes"][n]
+        full = data.get("llm_full_bytes", {}).get(n)
+        if full is None:
+            print(f"llm N={n}: missing full-delta bytes")
+            failures += 1
+            continue
+        frac = lora / full if full else float("inf")
+        ok = frac < LORA_BYTES_FRAC
+        status = "ok" if ok else "FAIL"
+        print(f"llm N={n}: full={full:.0f}B lora={lora:.0f}B "
+              f"({frac:.1%} of full-delta, gate < {LORA_BYTES_FRAC:.0%}) "
+              f"[{status}]")
+        if not ok:
             failures += 1
     return failures
 

@@ -19,6 +19,14 @@ hand-written tests:
 The check uses a fixed tiny federation (4 clients, linear model) so it
 compiles in seconds; the contracts are about program *structure*, which
 the tiny shape already exercises (vmap+scan, donation, masking).
+
+The same federation is then re-compiled with ``client.finetune = "lora"``
+semantics (``repro.models.lora.lora_wrap``, rank 2): the adapter-tree
+cohort program must meet the same trace budget / zero-retrace /
+no-host-transfer contracts.  The roofline ratchet stays on the base
+program only — the LoRA program's cost profile is intentionally
+different (frozen base hoisted as constants), so ratcheting it against
+the full-delta baseline would be meaningless.
 """
 from __future__ import annotations
 
@@ -54,6 +62,9 @@ class ContractReport:
     retraces: int = 0
     trace_budget: int = TRACE_BUDGET
     host_transfer_ops: List[str] = field(default_factory=list)
+    lora_traces_first_round: int = 0
+    lora_retraces: int = 0
+    lora_host_transfer_ops: List[str] = field(default_factory=list)
     flops: float = 0.0
     hbm_bytes: float = 0.0
     baseline: Optional[Dict] = None
@@ -69,6 +80,10 @@ class ContractReport:
             f"(budget {self.trace_budget}), retraces={self.retraces}",
             f"contracts: host transfer ops: "
             f"{self.host_transfer_ops or 'none'}",
+            f"contracts: lora cohort traces={self.lora_traces_first_round} "
+            f"(budget {self.trace_budget}), "
+            f"retraces={self.lora_retraces}, host transfer ops: "
+            f"{self.lora_host_transfer_ops or 'none'}",
             f"contracts: round program flops={self.flops:.3e} "
             f"hbm_bytes={self.hbm_bytes:.3e}",
         ]
@@ -192,6 +207,39 @@ def check_contracts(baseline_path: Optional[str] = None,
         report.violations.append(
             "host transfers in the round program: "
             + ", ".join(report.host_transfer_ops))
+
+    # same contracts on the LoRA-adapter cohort program (structure only —
+    # the roofline ratchet below gates the base program exclusively)
+    from repro.models.lora import lora_wrap
+    lmodel = lora_wrap(model, model.init(jax.random.PRNGKey(0)), rank=2)
+    _, largs = _fixed_inputs(lmodel)
+    lt0 = batched.cohort_trace_count()
+    lprogram = batched.make_cohort_program(lmodel, opt, LOCAL_STEPS,
+                                           use_prox=False, use_clip=False,
+                                           mesh=None)
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=".*donated.*")
+        lout = lprogram(*largs())
+        jax.block_until_ready(lout)
+        report.lora_traces_first_round = batched.cohort_trace_count() - lt0
+        lout = lprogram(*largs())      # second round, identical shapes
+        jax.block_until_ready(lout)
+    report.lora_retraces = (batched.cohort_trace_count() - lt0
+                            - report.lora_traces_first_round)
+    if report.lora_traces_first_round > trace_budget:
+        report.violations.append(
+            f"retrace budget (lora): {report.lora_traces_first_round} "
+            f"trace(s) for the adapter cohort, budget is {trace_budget}")
+    if report.lora_retraces != 0:
+        report.violations.append(
+            f"retrace budget (lora): {report.lora_retraces} retrace(s) "
+            f"across rounds at fixed shapes (expected 0)")
+    report.lora_host_transfer_ops = _host_transfer_ops(
+        lprogram.lower(*largs()).compile().as_text())
+    if report.lora_host_transfer_ops:
+        report.violations.append(
+            "host transfers in the lora round program: "
+            + ", ".join(report.lora_host_transfer_ops))
 
     cost = analyze_hlo(hlo)
     report.flops = cost.flops

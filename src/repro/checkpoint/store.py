@@ -1,4 +1,10 @@
-"""Pytree checkpointing: msgpack files with atomic rename + step indexing."""
+"""Pytree checkpointing: msgpack files with atomic rename + step indexing.
+
+The tree is whatever the trainer considers trainable state — full model
+params, or only the LoRA adapter tree under ``client.finetune = "lora"``
+(the frozen base is reconstructed from ``cfg.seed`` at resume, never
+persisted; ``Trainer.resume`` refuses checkpoints whose recorded
+``finetune`` mode mismatches the config)."""
 from __future__ import annotations
 
 import os

@@ -76,6 +76,11 @@ def init(configs: Optional[Dict[str, Any]] = None) -> Config:
     if "dataset" in configs:
         configs.setdefault("data", {})
         configs["data"] = {**configs["data"], "dataset": configs.pop("dataset")}
+    # ... and flat fine-tuning knobs ({"finetune": "lora", "lora_rank": 4})
+    for key in ("finetune", "lora_rank", "lora_alpha", "lora_targets"):
+        if key in configs:
+            configs.setdefault("client", {})
+            configs["client"] = {**configs["client"], key: configs.pop(key)}
     if "model" not in configs:
         ds = configs.get("data", {}).get("dataset", Config().data.dataset)
         configs["model"] = DATASET_DEFAULT_MODEL.get(ds, "femnist_cnn")

@@ -9,6 +9,15 @@ whole cohort as **one** compiled program: ``jax.vmap`` over clients around a
 ``jax.lax.scan`` over local steps (the FLGo-style vectorized multi-client
 simulation).
 
+Under ``client.finetune = "lora"`` the cohort's stacked leaves are the
+low-rank adapter factors only — ``(N, d_in, r)`` / ``(N, r, d_out)``
+(plus a leading layers axis for scan-stacked segments) — while the frozen
+base weights are closure constants of the wrapped model's ``apply``,
+hoisted ONCE into the compiled program and shared by every vmapped
+client.  Nothing below knows about LoRA: aggregation, in-program
+compression, EF residuals and byte accounting all just see a smaller
+stacked tree (``repro.models.lora``).
+
 Shape discipline (no per-round recompiles):
 
 * cohort size N, per-client step count S, and per-client sample count are

@@ -18,7 +18,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import compression as comp
-from repro.core.config import ClientConfig, validate_optimizer_hparams
+from repro.core.config import (
+    ClientConfig, validate_finetune_config, validate_optimizer_hparams,
+)
 from repro.core.local_train import evaluate, local_train
 from repro.data.fed_data import ClientData
 from repro.models.small import FLModel
@@ -34,6 +36,7 @@ class Client:
         self.cfg = cfg
         self.batch_size = batch_size
         validate_optimizer_hparams(cfg, owner=f"client {str(client_id)!r}")
+        validate_finetune_config(cfg, owner=f"client {str(client_id)!r}")
         self.optimizer = get_optimizer(cfg.optimizer, cfg.lr, cfg.momentum,
                                        cfg.weight_decay, cfg.nesterov,
                                        cfg.adam_b1, cfg.adam_b2, cfg.adam_eps)

@@ -145,6 +145,16 @@ class ClientConfig:
     # FedProx proximal term (0 disables; strategy plugin can override train)
     proximal_mu: float = 0.0
     max_grad_norm: float = 0.0        # 0 = no clipping
+    # Fine-tuning mode: "full" trains every parameter; "lora" freezes the
+    # base model (replicated once across the cohort) and trains low-rank
+    # A/B adapter factors per client — only adapters flow through
+    # aggregation/compression/EF-residuals/checkpointing (tiny wire bytes).
+    finetune: str = "full"            # full | lora
+    lora_rank: int = 8                # adapter rank r (>= 1 under "lora")
+    lora_alpha: float = 16.0          # adapter scale: W + (alpha/r)·A@B
+    # Substring patterns matched against "/"-joined param paths; () targets
+    # every eligible matrix leaf (ndim >= 2 beyond a stacked "layers" axis).
+    lora_targets: Tuple[str, ...] = ()
 
 
 # Per-client-sampleable hyperparameters (``system_heterogeneity.
@@ -197,6 +207,39 @@ def validate_optimizer_hparams(cfg: "ClientConfig", owner: str = "client"
             raise ValueError(
                 f"{owner}: ClientConfig.{name}={value!r} is invalid; "
                 f"expected {expected}")
+
+
+def validate_finetune_config(cfg: "ClientConfig", owner: str = "client"
+                             ) -> None:
+    """Reject bad fine-tuning knobs loudly at construction time.
+
+    Called from :func:`validate_config` and at ``Client`` construction so a
+    bad ``finetune`` / ``lora_rank`` / ``lora_alpha`` / ``lora_targets``
+    fails before any cohort program compiles.
+    """
+    if cfg.finetune not in ("full", "lora"):
+        raise ValueError(
+            f"{owner}: ClientConfig.finetune={cfg.finetune!r} is invalid; "
+            f"expected 'full' or 'lora'")
+    if not isinstance(cfg.lora_rank, int) or cfg.lora_rank < 0:
+        raise ValueError(
+            f"{owner}: ClientConfig.lora_rank={cfg.lora_rank!r} is invalid; "
+            f"expected an int >= 0")
+    if cfg.finetune == "lora" and cfg.lora_rank < 1:
+        raise ValueError(
+            f"{owner}: ClientConfig.lora_rank={cfg.lora_rank!r} is invalid "
+            f"under finetune='lora'; expected an int >= 1")
+    if not _finite(cfg.lora_alpha) or float(cfg.lora_alpha) <= 0:
+        raise ValueError(
+            f"{owner}: ClientConfig.lora_alpha={cfg.lora_alpha!r} is "
+            f"invalid; expected a finite float > 0")
+    targets = cfg.lora_targets
+    if isinstance(targets, str) or not isinstance(targets, Sequence) \
+            or any(not isinstance(t, str) or not t for t in targets):
+        raise ValueError(
+            f"{owner}: ClientConfig.lora_targets={targets!r} is invalid; "
+            f"expected a sequence of non-empty path-substring patterns "
+            f"(() targets every eligible matrix leaf)")
 
 
 def validate_hyperparam_choices(choices) -> None:
@@ -532,6 +575,7 @@ def validate_config(cfg: "Config") -> None:
     if not cfg.tracking.out_dir:
         raise ValueError("tracking.out_dir must be a non-empty path")
     validate_optimizer_hparams(cfg.client)
+    validate_finetune_config(cfg.client)
     validate_hyperparam_choices(cfg.system_heterogeneity.hyperparam_choices)
     validate_resource_config(cfg.resources)
     validate_fault_config(cfg.faults)

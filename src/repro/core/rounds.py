@@ -89,6 +89,34 @@ class Trainer:
                  server: Optional[Server] = None,
                  client_cls=Client):
         self.cfg = config
+        # whole-tree validation (repro.core.config.validate_config) first —
+        # the client.finetune fields drive the model wrapping below
+        validate_config(config)
+        if config.client.finetune == "lora":
+            # Freeze the base model and train low-rank adapters only: the
+            # wrapper *is* an FLModel whose param tree holds just the A/B
+            # factors, so every engine/aggregation/compression/checkpoint
+            # stage below operates on adapters with zero changes (and
+            # comm_up_bytes automatically counts only adapter payload).
+            # The base is initialized once from cfg.seed and closed over —
+            # replicated per program, never per client.
+            from repro.models.lora import lora_wrap
+            wrapped = lora_wrap(
+                model, model.init(jax.random.PRNGKey(config.seed)),
+                config.client.lora_rank, config.client.lora_alpha,
+                config.client.lora_targets)
+            if not wrapped.defs:
+                raise ValueError(
+                    f"client.finetune='lora' with lora_targets="
+                    f"{config.client.lora_targets!r} matched no eligible "
+                    f"matrix leaves of model {model.name!r} (eligible: "
+                    f">= 2 dims beyond a stacked 'layers' axis) — nothing "
+                    f"to train")
+            model = wrapped
+            if server is not None:
+                # a caller-built server was constructed around the base
+                # model; evaluation/aggregation must see the adapter model
+                server.model = model
         self.model = model
         self.fed_data = fed_data
         self.tracker = tracker or Tracker(config.tracking.backend,
@@ -96,10 +124,7 @@ class Trainer:
         self.server = server or Server(model, config, fed_data.test)
         self.client_cls = client_cls
         self.clients: Dict[str, Client] = {}
-        # whole-tree validation (repro.core.config.validate_config) — the
-        # resource/checkpoint/fault checks that used to live inline here
         res = config.resources
-        validate_config(config)
         self.faults = FaultInjector(config.faults)
         if config.faults.active and \
                 config.faults.min_clients_per_round > \
@@ -561,6 +586,7 @@ class Trainer:
             "format": 1,
             "round": int(completed),
             "execution": self.cfg.resources.execution,
+            "finetune": self.cfg.client.finetune,
             "server": self.server.state_dict(),
             "history": self.history,
             "het_assignment": dict(self.het.assignment),
@@ -602,6 +628,12 @@ class Trainer:
                 f"{state.get('execution')!r}-execution run; this trainer "
                 f"uses {self.cfg.resources.execution!r} — resume with the "
                 f"same engine")
+        if state.get("finetune", "full") != self.cfg.client.finetune:
+            raise ValueError(
+                f"checkpoint was written by a finetune="
+                f"{state.get('finetune', 'full')!r} run; this trainer uses "
+                f"finetune={self.cfg.client.finetune!r} — the parameter "
+                f"trees are incompatible (LoRA adapters vs full weights)")
         completed = int(state["round"])
         self.server.load_state_dict(state["server"])
         self.server.params = jax.tree_util.tree_map(

@@ -89,11 +89,36 @@ def make_synthetic_linear(n: int = 8_000, dim: int = 64, n_classes: int = 10,
     return RawDataset(x, y.astype(np.int32), n_classes)
 
 
+def make_tiny_lm(n_seqs: int = 2_000, seq_len: int = 16, n_docs: int = 40,
+                 vocab: int = 64, seed: int = 0) -> RawDataset:
+    """Token sequences for the ``tiny_lm`` transformer: per-"document"
+    bigram Markov chains (like ``shakespeare``, but vectorized over
+    sequences — one numpy pass per position — and sized for seconds-fast
+    CPU LLM rounds).  A realistic partition is non-IID per document."""
+    rng = np.random.RandomState(seed)
+    n_styles = 4
+    base = rng.dirichlet(np.ones(vocab) * 0.3, size=vocab)
+    styles = np.stack([
+        0.5 * base + 0.5 * rng.dirichlet(np.ones(vocab) * 0.1, size=vocab)
+        for _ in range(n_styles)])
+    cum = np.cumsum(styles, axis=-1)            # (styles, vocab, vocab)
+    doc = rng.randint(0, n_docs, size=n_seqs).astype(np.int32)
+    sty = rng.randint(0, n_styles, size=n_docs)[doc]
+    seqs = np.zeros((n_seqs, seq_len), dtype=np.int32)
+    c = rng.randint(0, vocab, size=n_seqs)
+    for t in range(seq_len):
+        seqs[:, t] = c
+        u = rng.rand(n_seqs, 1)
+        c = np.minimum((cum[sty, c] < u).sum(axis=1), vocab - 1)
+    return RawDataset(seqs, seqs.copy(), vocab, natural_client=doc)
+
+
 DATASETS = {
     "femnist": make_femnist,
     "cifar10": make_cifar10,
     "shakespeare": make_shakespeare,
     "synthetic": make_synthetic_linear,
+    "tiny_lm": make_tiny_lm,
 }
 
 

@@ -13,7 +13,7 @@ from typing import Optional
 
 import jax.numpy as jnp
 
-from repro.kernels import fedavg_agg, quant, rwkv6_scan, stc_topk
+from repro.kernels import attention, fedavg_agg, quant, rwkv6_scan, stc_topk
 
 # Process-wide override installed via set_interpret(); None defers to the env.
 _OVERRIDE: Optional[bool] = None
@@ -79,6 +79,13 @@ def quantize(x, interpret: bool = None):
 def dequantize(q, s, shape, dtype=jnp.float32, interpret: bool = None):
     return quant.dequantize(
         q, s, tuple(shape), dtype, interpret=get_interpret(interpret))
+
+
+def flash_attention(q, k, v, causal: bool = True, interpret: bool = None):
+    """Tiled online-softmax attention, (B, H, S, D) MHA layout, with a
+    flash backward (probs recomputed from the saved log-sum-exp)."""
+    return attention.flash_attention(
+        q, k, v, causal=causal, interpret=get_interpret(interpret))
 
 
 def wkv6(r, k, v, logw, u, s0, interpret: bool = None):

@@ -97,6 +97,22 @@ def dequantize_ref(q, s, shape, dtype=jnp.float32):
     return out.reshape(-1)[:size].reshape(shape).astype(dtype)
 
 
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True) -> jnp.ndarray:
+    """Plain-softmax attention on (B, H, S, D) — oracle for
+    ``kernels.attention.flash_attention`` (materializes the full (S, S)
+    score matrix the flash kernel never forms)."""
+    B, H, S, D = q.shape
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(jnp.float32(D))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
 def wkv6_ref(r, k, v, logw, u, s0):
     """Sequential (non-chunked) WKV6 recurrence — ground truth."""
     B, T, H, hd = r.shape

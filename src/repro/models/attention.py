@@ -13,6 +13,7 @@ key, and W_uk / W_uv are folded into the query/output projections.
 from __future__ import annotations
 
 import math
+import os
 from typing import Optional
 
 import jax
@@ -22,6 +23,25 @@ from repro.core.config import ArchConfig
 from repro.models.layers import ParamDef, apply_rope, zeros_init
 
 NEG_INF = -1e30
+
+# Pallas flash-attention routing (kernels/attention.py).  None defers to the
+# REPRO_FLASH_ATTN env var (default off — the jnp chunked path is the
+# paper-faithful baseline).  The flag is read at *trace* time: programs
+# compiled before a toggle keep their old lowering, so tests/benchmarks must
+# build fresh jitted programs (or clear program caches) after switching.
+_FLASH_OVERRIDE: Optional[bool] = None
+
+
+def set_flash_attention(mode: Optional[bool]) -> None:
+    """Force the Pallas flash-attention hot path on/off; None -> env flag."""
+    global _FLASH_OVERRIDE
+    _FLASH_OVERRIDE = mode
+
+
+def use_flash_attention() -> bool:
+    if _FLASH_OVERRIDE is not None:
+        return _FLASH_OVERRIDE
+    return os.environ.get("REPRO_FLASH_ATTN", "0") == "1"
 
 
 # ---------------------------------------------------------------------------
@@ -152,6 +172,23 @@ def _causal_mask(sq: int, sk: int, q_offset: int, window: int = 0):
     return m
 
 
+def _flash_gqa(q, k, v):
+    """Route grouped causal attention through the Pallas flash kernel.
+
+    q: (B,S,K,G,D); k, v: (B,S,K,D).  The kernel takes MHA layout
+    (B,H,S,D), so kv heads are repeated per group (query head h = k·G+g
+    reads kv head h//G = k) and the output is folded back to grouped
+    layout.  Numerics match ``_plain_attention`` at fp32 tolerance (see
+    tests/test_attention_kernel.py), not bit-exactly."""
+    from repro.kernels import ops
+    B, S, K, G, D = q.shape
+    qh = q.reshape(B, S, K * G, D).transpose(0, 2, 1, 3)
+    kh = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3)
+    vh = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3)
+    out = ops.flash_attention(qh, kh, vh, causal=True)
+    return out.transpose(0, 2, 1, 3).reshape(B, S, K, G, D)
+
+
 def chunked_causal_attention(q, k, v, *, window: int = 0, q_chunk: int = 1024):
     """Causal (optionally banded) attention, chunked over query blocks.
 
@@ -160,8 +197,15 @@ def chunked_causal_attention(q, k, v, *, window: int = 0, q_chunk: int = 1024):
     with hi_i = (i+1)*q_chunk and lo_i = max(0, hi_i - q_chunk - window + 1)
     rounded down to a chunk boundary.  No out-of-band FLOPs for windowed
     attention; ~2x fewer FLOPs than full-matrix for long causal sequences.
+
+    With the flash flag on (``set_flash_attention`` / ``REPRO_FLASH_ATTN``),
+    un-windowed attention routes through the Pallas tiled online-softmax
+    kernel instead (``kernels/attention.py``); windowed attention and MLA's
+    asymmetric v-dim keep the jnp path.
     """
     B, S, K, G, D = q.shape
+    if window == 0 and v.shape[-1] == D and use_flash_attention():
+        return _flash_gqa(q, k, v)
     if S <= q_chunk:
         return _plain_attention(q, k, v, _causal_mask(S, S, 0, window))
     n_blocks = S // q_chunk

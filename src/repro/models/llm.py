@@ -1,0 +1,60 @@
+"""Transformer LLMs as federated :class:`FLModel`\\ s.
+
+Bridges the model zoo's decoder stack (``repro.models.transformer``:
+stacked-scan segments, GQA attention, RoPE, remat) into the FL runtime's
+model interface, so an LLM cohort runs through the same three execution
+engines as the paper's small models — and, under
+``client.finetune = "lora"``, trains only low-rank adapters
+(``repro.models.lora``) with the frozen base replicated once.
+
+``tiny_lm`` is the CPU-fast registered default (2 layers, d_model 32,
+vocab 64) paired with the ``tiny_lm`` synthetic token dataset; build
+bigger variants with :func:`transformer_lm` from any ``ArchConfig``
+(e.g. ``repro.configs.get_arch("glm4-9b", reduced=True)``).
+"""
+from __future__ import annotations
+
+import functools
+
+from repro.core.config import ArchConfig
+from repro.models import transformer
+from repro.models.small import FLModel
+
+TINY_LM_VOCAB = 64
+TINY_LM_SEQ_LEN = 16
+
+
+def transformer_lm(arch: ArchConfig, name: str = None) -> FLModel:
+    """Wrap a decoder-only ``ArchConfig`` as an :class:`FLModel`.
+
+    The FLModel's params are ``transformer.model_defs(arch)`` (segments
+    stacked on a leading "layers" axis, scanned with remat off — these
+    are small federated fine-tuning configs, not 96-layer pretraining),
+    and ``loss_and_metrics`` is next-token CE via ``is_sequence=True``
+    (predict token t+1 at position t, like the Shakespeare char LM).
+    """
+    if arch.family not in ("dense", "moe"):
+        raise ValueError(
+            f"transformer_lm supports dense/moe decoder archs, got "
+            f"family={arch.family!r}")
+    if arch.encoder_layers:
+        raise ValueError("transformer_lm is decoder-only")
+    defs = transformer.model_defs(arch)
+
+    def apply(p, x):  # flcheck: hot
+        logits, _ = transformer.forward(arch, p, x, remat=False)
+        return logits
+
+    return FLModel(name or arch.name, defs, apply, arch.vocab,
+                   (arch.max_seq_len,), is_sequence=True)
+
+
+@functools.lru_cache(maxsize=1)
+def tiny_lm() -> FLModel:
+    """The registered CPU-fast LLM: one instance per process (identity
+    hash — repeated ``get_model`` calls reuse compiled programs)."""
+    arch = ArchConfig(
+        name="tiny_lm", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, vocab=TINY_LM_VOCAB, max_seq_len=TINY_LM_SEQ_LEN,
+        dtype="float32")
+    return transformer_lm(arch)

@@ -3,6 +3,7 @@ from __future__ import annotations
 
 from typing import Callable, Dict
 
+from repro.models.llm import tiny_lm
 from repro.models.small import (
     FLModel, cifar_resnet18, femnist_cnn, linear_model, shakespeare_lstm,
 )
@@ -13,6 +14,7 @@ _FACTORIES: Dict[str, Callable[[], FLModel]] = {
     "cifar_resnet18": cifar_resnet18,
     "resnet18": cifar_resnet18,
     "linear": linear_model,
+    "tiny_lm": tiny_lm,
 }
 
 # sensible default model per built-in dataset (init({"model": ...}) optional)
@@ -21,6 +23,7 @@ DATASET_DEFAULT_MODEL = {
     "shakespeare": "shakespeare_lstm",
     "cifar10": "cifar_resnet18",
     "synthetic": "linear",
+    "tiny_lm": "tiny_lm",
 }
 
 

@@ -1,0 +1,343 @@
+"""Equivalence wall for federated LoRA fine-tuning
+(``client.finetune = "lora"`` — ``repro.models.lora``):
+
+* exactness: rank-0 / no-target wrapping is *bit-identical* to the frozen
+  base forward; the merged ``W + (alpha/r)·A@B`` forward matches the
+  hand-computed adapter path at 1e-5; adapter init (B = 0) makes round 0
+  start from the base model exactly;
+* three-engine e2e parity: sequential vs batched vs degenerate-async
+  LoRA cohorts agree at 1e-5 over 3 rounds, with the whole transformer
+  cohort compiled ONCE (``cohort_trace_count``);
+* STC/int8-compressed adapters keep error-feedback residual semantics
+  (sequential per-client stage vs the in-program batched store);
+* ``comm_up_bytes`` counts only the adapter payload — the full-delta /
+  adapter byte ratio equals the parameter-count ratio
+  (per target leaf: D / (rank · (d_in + d_out)));
+* loud failures: bad finetune configs, no-match targets, checkpoint
+  finetune-mode mismatch on resume.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro as easyfl
+from repro.core.batched import cohort_trace_count
+from repro.models.lora import (
+    adapter_defs, adapter_param_count, base_param_count, lora_wrap,
+    merge_lora, target_paths,
+)
+from repro.models.small import linear_model
+
+RANK, ALPHA = 4, 16.0
+
+
+def _tiny_lm():
+    from repro.models.llm import tiny_lm
+    return tiny_lm()
+
+
+def _init_adapters(wrapped, seed=0):
+    return wrapped.init(jax.random.PRNGKey(seed))
+
+
+def _randomize_b(adapters, seed=1):
+    """Nonzero B factors (init gives B = 0) so the delta is live."""
+    leaves, treedef = jax.tree_util.tree_flatten(adapters)
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [jax.random.normal(k, l.shape, l.dtype) * 0.1
+                  for k, l in zip(keys, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# exactness at the module level
+# ---------------------------------------------------------------------------
+
+
+def test_rank0_bit_identical_to_base():
+    model = linear_model()
+    base = model.init(jax.random.PRNGKey(0))
+    wrapped = lora_wrap(model, base, rank=0)
+    assert wrapped.defs == {}
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    np.testing.assert_array_equal(np.asarray(wrapped.apply({}, x)),
+                                  np.asarray(model.apply(base, x)))
+
+
+def test_no_matching_target_bit_identical_to_base():
+    model = linear_model()
+    base = model.init(jax.random.PRNGKey(0))
+    wrapped = lora_wrap(model, base, rank=RANK, targets=("no_such_leaf",))
+    assert wrapped.defs == {}
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+    np.testing.assert_array_equal(np.asarray(wrapped.apply({}, x)),
+                                  np.asarray(model.apply(base, x)))
+
+
+def test_adapter_init_starts_from_base_exactly():
+    """B = 0 at init => the adapter forward IS the base forward, bitwise
+    (merge adds W + scale·A@0 in f32 and casts back)."""
+    for model, x in [
+        (linear_model(),
+         jax.random.normal(jax.random.PRNGKey(1), (8, 64))),
+        (_tiny_lm(),
+         jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, 64)),
+    ]:
+        base = model.init(jax.random.PRNGKey(0))
+        wrapped = lora_wrap(model, base, rank=RANK, alpha=ALPHA)
+        adapters = _init_adapters(wrapped)
+        b_leaves = [np.asarray(ab["b"]) for ab in
+                    jax.tree_util.tree_leaves(
+                        adapters, is_leaf=lambda t: isinstance(t, dict)
+                        and "b" in t)]
+        assert b_leaves and all((b == 0).all() for b in b_leaves)
+        np.testing.assert_array_equal(
+            np.asarray(wrapped.apply(adapters, x)),
+            np.asarray(model.apply(base, x)))
+
+
+def test_merged_forward_matches_hand_computed_adapter_path():
+    """linear model: x@(W + (alpha/r)·A@B) + b == x@W + b + s·(x@A)@B."""
+    model = linear_model()
+    base = model.init(jax.random.PRNGKey(0))
+    wrapped = lora_wrap(model, base, rank=RANK, alpha=ALPHA)
+    adapters = _randomize_b(_init_adapters(wrapped))
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 64))
+    got = wrapped.apply(adapters, x)
+    a, b = adapters["fc/w"]["a"], adapters["fc/w"]["b"]
+    scale = ALPHA / RANK
+    exp = (x @ base["fc"]["w"] + base["fc"]["b"]
+           + scale * (x @ a) @ b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_merge_lora_matches_wrapper_on_transformer():
+    """Explicitly merging into the base tree then running the base
+    forward == the wrapper's merge-on-the-fly forward."""
+    model = _tiny_lm()
+    base = model.init(jax.random.PRNGKey(0))
+    wrapped = lora_wrap(model, base, rank=RANK, alpha=ALPHA)
+    adapters = _randomize_b(_init_adapters(wrapped))
+    x = jax.random.randint(jax.random.PRNGKey(3), (4, 16), 0, 64)
+    merged = merge_lora(base, adapters, ALPHA / RANK)
+    np.testing.assert_allclose(np.asarray(model.apply(merged, x)),
+                               np.asarray(wrapped.apply(adapters, x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_target_patterns_select_subtrees():
+    model = _tiny_lm()
+    all_paths = target_paths(model.defs)
+    attn_paths = target_paths(model.defs, ("attn",))
+    assert attn_paths and set(attn_paths) < set(all_paths)
+    assert all("attn" in p for p in attn_paths)
+    # 1-dim leaves (norm scales) are never eligible
+    assert not any("norm" in p for p in all_paths)
+    defs = adapter_defs(model.defs, RANK, ("attn",))
+    assert set(defs) == set(attn_paths)
+
+
+def test_stacked_segments_get_batched_adapters():
+    """Scan-stacked transformer segments carry the leading layers axis
+    into their A/B factors."""
+    model = _tiny_lm()
+    defs = adapter_defs(model.defs, RANK)
+    wq = defs["segments/0/attn/wq"]
+    n_layers = model.defs["segments"][0]["attn"]["wq"].shape[0]
+    assert wq["a"].shape[0] == n_layers and wq["a"].axes[0] == "layers"
+    assert wq["b"].shape[:2] == (n_layers, RANK)
+
+
+def test_adapter_param_count_formula():
+    model = _tiny_lm()
+    count = adapter_param_count(model, RANK)
+    expect = sum(
+        int(np.prod(d["a"].shape)) + int(np.prod(d["b"].shape))
+        for d in adapter_defs(model.defs, RANK).values())
+    assert count == expect > 0
+    assert count < base_param_count(model)
+
+
+# ---------------------------------------------------------------------------
+# config validation + api folding (loud failures)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad, match", [
+    ({"finetune": "qlora"}, "finetune"),
+    ({"finetune": "lora", "lora_rank": 0}, "lora_rank"),
+    ({"finetune": "lora", "lora_rank": -3}, "lora_rank"),
+    ({"finetune": "lora", "lora_alpha": 0.0}, "lora_alpha"),
+    ({"finetune": "lora", "lora_alpha": float("nan")}, "lora_alpha"),
+    ({"finetune": "lora", "lora_targets": ("ok", "")}, "lora_targets"),
+])
+def test_invalid_finetune_config_rejected(bad, match):
+    import dataclasses
+
+    from repro.core.config import ClientConfig, validate_finetune_config
+    cfg = dataclasses.replace(ClientConfig(), **bad)
+    with pytest.raises((ValueError, TypeError), match=match):
+        validate_finetune_config(cfg)
+
+
+def test_api_folds_flat_finetune_keys():
+    easyfl.reset()
+    cfg = easyfl.init({"model": "linear", "dataset": "synthetic",
+                       "finetune": "lora", "lora_rank": 2,
+                       "lora_alpha": 8.0})
+    easyfl.reset()
+    assert cfg.client.finetune == "lora"
+    assert cfg.client.lora_rank == 2 and cfg.client.lora_alpha == 8.0
+
+
+def test_trainer_rejects_no_match_targets():
+    easyfl.reset()
+    easyfl.init({"model": "linear", "dataset": "synthetic",
+                 "finetune": "lora", "lora_rank": 2,
+                 "lora_targets": ("no_such_leaf",)})
+    with pytest.raises(ValueError, match="matched no eligible"):
+        easyfl.run()
+    easyfl.reset()
+
+
+# ---------------------------------------------------------------------------
+# three-engine e2e parity + single-program contract
+# ---------------------------------------------------------------------------
+
+
+def _run(resources, client_over=None, server_over=None, data_over=None,
+         model_dataset=("tiny_lm", "tiny_lm")):
+    model, dataset = model_dataset
+    easyfl.reset()
+    easyfl.init({
+        "model": model, "dataset": dataset,
+        "data": {"num_clients": 8, "batch_size": 32, **(data_over or {})},
+        "server": {"rounds": 3, "clients_per_round": 4,
+                   **(server_over or {})},
+        "client": {"local_epochs": 1, "lr": 0.1, "finetune": "lora",
+                   "lora_rank": RANK, "lora_alpha": ALPHA,
+                   **(client_over or {})},
+        "resources": resources,
+    })
+    t0 = cohort_trace_count()
+    res = easyfl.run()
+    res["traces"] = cohort_trace_count() - t0
+    easyfl.reset()
+    return res
+
+
+def _assert_equivalent(ra, rb, bytes_exact=True):
+    for a, b in zip(jax.tree_util.tree_leaves(ra["params"]),
+                    jax.tree_util.tree_leaves(rb["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        [h["train_loss"] for h in ra["history"]],
+        [h["train_loss"] for h in rb["history"]], rtol=1e-4)
+    if bytes_exact:
+        assert ([h["comm_up_bytes"] for h in ra["history"]]
+                == [h["comm_up_bytes"] for h in rb["history"]])
+
+
+def test_three_engine_lora_parity_zero_retraces():
+    """sequential vs batched vs degenerate-async (wave = cohort,
+    staleness 0) LoRA transformer cohorts: one trajectory, and each
+    compiled engine traces its cohort program exactly once for all 3
+    rounds."""
+    rs = _run({"execution": "sequential"})
+    rb = _run({"execution": "batched"})
+    ra = _run({"execution": "async", "buffer_size": 4,
+               "max_concurrency": 4})
+    _assert_equivalent(rs, rb)
+    _assert_equivalent(rb, ra)
+    assert rb["traces"] == 1, "batched LoRA cohort retraced"
+    assert ra["traces"] == 1, "async LoRA waves retraced"
+
+
+def test_transformer_lora_cohort_n20_single_program():
+    """Acceptance: a transformer LoRA cohort of N >= 20 runs as ONE jitted
+    program — 1 trace, 0 retraces across 3 rounds."""
+    r = _run({"execution": "batched"},
+             server_over={"clients_per_round": 20},
+             data_over={"num_clients": 20})
+    assert r["traces"] == 1
+    assert all(h["clients"] == 20 for h in r["history"])
+
+
+# ---------------------------------------------------------------------------
+# compressed adapters: EF-residual semantics on the fast path
+# ---------------------------------------------------------------------------
+
+
+def test_stc_compressed_adapters_keep_ef_semantics():
+    """3 rounds of STC-compressed adapter uploads: the batched in-program
+    residual store must match the sequential per-client EF stage —
+    trajectory AND nnz-derived wire bytes."""
+    over = {"compression": "stc", "stc_sparsity": 0.25}
+    _assert_equivalent(_run({"execution": "sequential"}, over),
+                       _run({"execution": "batched"}, over))
+
+
+def test_int8_compressed_adapters_match_sequential():
+    over = {"compression": "int8"}
+    _assert_equivalent(
+        _run({"execution": "sequential"}, over,
+             model_dataset=("linear", "synthetic")),
+        _run({"execution": "batched"}, over,
+             model_dataset=("linear", "synthetic")))
+
+
+# ---------------------------------------------------------------------------
+# wire accounting: only adapters ever hit the wire
+# ---------------------------------------------------------------------------
+
+
+def test_comm_bytes_count_only_adapter_payload():
+    model = _tiny_lm()
+    full = _run({"execution": "batched"}, {"finetune": "full"})
+    lora = _run({"execution": "batched"})
+    n_adapter = adapter_param_count(model, RANK)
+    n_base = base_param_count(model)
+    for h in lora["history"]:
+        assert h["comm_up_bytes"] == n_adapter * 4 * h["clients"]
+    for h in full["history"]:
+        assert h["comm_up_bytes"] == n_base * 4 * h["clients"]
+    # the full-delta / adapter ratio is the parameter-count ratio —
+    # per target leaf, D / (rank · (d_in + d_out))
+    ratio = (full["history"][0]["comm_up_bytes"]
+             / lora["history"][0]["comm_up_bytes"])
+    assert ratio == pytest.approx(n_base / n_adapter)
+    assert ratio > 2.0
+
+
+# ---------------------------------------------------------------------------
+# checkpointing: adapters only, mode mismatch is loud
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_resume_rejects_finetune_mismatch(tmp_path):
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.data.fed_data import build_federated_data
+    from repro.models.registry import get_model
+
+    def make(client_over):
+        cfg = Config.make({
+            "model": "linear",
+            "data": {"dataset": "synthetic", "num_clients": 8,
+                     "batch_size": 32},
+            "server": {"rounds": 2, "clients_per_round": 4},
+            "client": {"local_epochs": 1, "lr": 0.1, **client_over},
+            "checkpoint": {"dir": str(tmp_path), "every": 1},
+            "tracking": {"enabled": False},
+        })
+        return Trainer(cfg, get_model("linear"),
+                       build_federated_data(cfg.data))
+
+    lora_trainer = make({"finetune": "lora", "lora_rank": 2})
+    lora_trainer.run()
+    # the checkpointed tree is adapters only — resuming as full must fail
+    with pytest.raises(ValueError, match="finetune"):
+        make({}).resume()

@@ -1,4 +1,4 @@
-"""Paper Fig. 7: distributed-training scalability.
+"""Paper Fig. 7: distributed-training scalability + population scaling.
 
 (a) round time falls with device count (1.84x for 8->16 in the paper,
     sub-linear by 64);
@@ -7,8 +7,19 @@
 Reproduced with the virtual clock: 100 selected clients per round, per-client
 time proportional to its sample count (measured constant folded out), the
 round time = GreedyAda makespan — the paper's quantity at simulation scale.
+
+``collect()`` adds the million-client population sweep: with the cohort
+fixed at 100, population grows 10^3 -> 10^6 over a virtual dataset and a
+real batched training round is timed.  Per-round cost must be O(cohort),
+not O(population) — the lazy id space samples in O(k), the tiered data
+pool bounds device residency, and heterogeneity assignments materialize
+per cohort — so both round time and device memory must stay flat across
+the sweep (gated by ``scripts/check_bench.py``).
 """
 from __future__ import annotations
+
+import time
+from typing import Dict, Iterable
 
 import numpy as np
 
@@ -16,6 +27,9 @@ from benchmarks.common import emit
 from repro.core.config import DataConfig
 from repro.data import build_federated_data
 from repro.sched.greedyada import GreedyAda
+
+POPULATIONS = (1_000, 10_000, 100_000, 1_000_000)
+COHORT = 100
 
 
 def _round_time(num_devices: int, data_amount: float, seed=0) -> float:
@@ -32,8 +46,77 @@ def _round_time(num_devices: int, data_amount: float, seed=0) -> float:
     return max(sum(times[c] for c in g) for g in groups if g)
 
 
+def _population_trainer(population: int):
+    import jax
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.core.server import Server
+    from repro.models.registry import get_model
+
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": population,
+                 "batch_size": 32, "virtual": "on"},
+        "server": {"rounds": 3, "clients_per_round": COHORT,
+                   "test_every": 0},
+        "client": {"local_epochs": 1, "lr": 0.1},
+        "resources": {"execution": "batched"},
+        "tracking": {"enabled": False},
+    })
+    model = get_model(cfg.model)
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(cfg.seed))
+    return trainer
+
+
+def _device_bytes(trainer) -> float:
+    """Live device bytes after a round: ``jax.live_arrays()`` when the
+    runtime exposes it, else the executor's own tier accounting plus the
+    global params (an undercount, but flat iff residency is flat)."""
+    import jax
+    if hasattr(jax, "live_arrays"):
+        return float(sum(a.nbytes for a in jax.live_arrays()))
+    total = sum(np.asarray(l).nbytes
+                for l in jax.tree_util.tree_leaves(trainer.server.params))
+    eng = trainer.engine
+    for store in (getattr(eng, "_pool", None), getattr(eng, "_ef", None)):
+        if store is not None:
+            total += store.device_bytes()
+    return float(total)
+
+
+def collect(populations: Iterable[int] = POPULATIONS) -> Dict[str, Dict]:
+    """Population sweep at fixed cohort for ``benchmarks.run --json``."""
+    out: Dict[str, Dict] = {"scalability_round_s": {},
+                            "scalability_device_bytes": {},
+                            "scalability_cohort": COHORT}
+    for pop in populations:
+        trainer = _population_trainer(pop)
+        trainer.run_round(0)                    # warm-up (compile)
+        times = []
+        for r in (1, 2):
+            t0 = time.perf_counter()
+            trainer.run_round(r)
+            times.append(time.perf_counter() - t0)
+        out["scalability_round_s"][str(pop)] = min(times)
+        out["scalability_device_bytes"][str(pop)] = _device_bytes(trainer)
+    return out
+
+
 def main():
     rows = []
+    data = collect()
+    t0 = data["scalability_round_s"][str(POPULATIONS[0])]
+    b0 = data["scalability_device_bytes"][str(POPULATIONS[0])]
+    for pop in POPULATIONS:
+        t = data["scalability_round_s"][str(pop)]
+        b = data["scalability_device_bytes"][str(pop)]
+        rows.append((f"population_round_time_P{pop}", t,
+                     f"vs_P{POPULATIONS[0]}={t / t0:.2f}x (flat = O(cohort))"))
+        rows.append((f"population_device_bytes_P{pop}", b,
+                     f"vs_P{POPULATIONS[0]}={b / b0:.2f}x (flat = bounded "
+                     f"tiers)"))
     base8 = _round_time(8, 1.0)
     for m in (8, 16, 24, 32, 64):
         t = _round_time(m, 1.0)

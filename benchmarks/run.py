@@ -46,11 +46,12 @@ def run_json(path: str) -> None:
     and compressed in-program-vs-gathering round numbers as JSON
     (consumed by scripts/check_bench.py)."""
     from benchmarks import (bench_batched, bench_compression, bench_faults,
-                            bench_llm)
+                            bench_llm, bench_scalability)
     data = bench_batched.collect()
     data.update(bench_compression.collect_rounds())
     data.update(bench_faults.collect())
     data.update(bench_llm.collect())
+    data.update(bench_scalability.collect())
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
     print(f"# wrote {path}")

@@ -49,6 +49,12 @@ FAULTS_OFF_NOISE = 1.25
 # LoRA wire bytes must stay under this fraction of the full-delta payload
 # (deterministic byte accounting — gated at every measured cohort size)
 LORA_BYTES_FRAC = 0.05
+# population sweep at fixed cohort (benchmarks/bench_scalability): growing
+# the population 10^3 -> 10^6 must leave per-round cost O(cohort).  Round
+# time gets headroom for CPU timing jitter; device bytes are near-exact
+# accounting of bounded tiers, so the tolerance is tight.
+SCALE_TIME_TOL = 2.0
+SCALE_MEM_TOL = 1.25
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "test_baseline.json")
@@ -191,6 +197,25 @@ def check(data: dict) -> int:
     # the full-delta wire payload.  Bytes are deterministic (stacked
     # global-tree leaves x 4B), so this is gated at every cohort size —
     # a ratio drift means the adapter tree leaked base-sized leaves.
+    # population scaling: round time and device memory must stay flat as
+    # the population grows at fixed cohort — any O(population) per-round
+    # step (id materialization, eager data pools, population-sized
+    # assignment maps) shows up here as super-flat growth
+    for metric, tol in (("scalability_round_s", SCALE_TIME_TOL),
+                        ("scalability_device_bytes", SCALE_MEM_TOL)):
+        series = data.get(metric, {})
+        if not series:
+            continue
+        pops = sorted(series, key=int)
+        base = series[pops[0]]
+        for p in pops[1:]:
+            ratio = series[p] / base if base else float("inf")
+            ok = series[p] <= base * tol
+            status = "ok" if ok else "FAIL"
+            print(f"{metric} P={p}: {series[p]:.4g} "
+                  f"({ratio:.2f}x vs P={pops[0]}, gate <= {tol}x) [{status}]")
+            if not ok:
+                failures += 1
     for n in sorted(data.get("llm_lora_bytes", {}), key=int):
         lora = data["llm_lora_bytes"][n]
         full = data.get("llm_full_bytes", {}).get(n)

@@ -65,6 +65,9 @@ class ContractReport:
     lora_traces_first_round: int = 0
     lora_retraces: int = 0
     lora_host_transfer_ops: List[str] = field(default_factory=list)
+    tree_traces_first_round: int = 0
+    tree_retraces: int = 0
+    tree_host_transfer_ops: List[str] = field(default_factory=list)
     flops: float = 0.0
     hbm_bytes: float = 0.0
     baseline: Optional[Dict] = None
@@ -84,6 +87,11 @@ class ContractReport:
             f"(budget {self.trace_budget}), "
             f"retraces={self.lora_retraces}, host transfer ops: "
             f"{self.lora_host_transfer_ops or 'none'}",
+            f"contracts: hierarchical aggregation "
+            f"traces={self.tree_traces_first_round} "
+            f"(budget {self.trace_budget}), "
+            f"retraces={self.tree_retraces}, host transfer ops: "
+            f"{self.tree_host_transfer_ops or 'none'}",
             f"contracts: round program flops={self.flops:.3e} "
             f"hbm_bytes={self.hbm_bytes:.3e}",
         ]
@@ -240,6 +248,44 @@ def check_contracts(baseline_path: Optional[str] = None,
         report.violations.append(
             "host transfers in the lora round program: "
             + ", ".join(report.lora_host_transfer_ops))
+
+    # hierarchical streaming aggregation: the reduction-tree program
+    # (kernels.fedavg_agg._tree_padded) must meet the same structural
+    # contracts — one trace for a fixed (cohort, fanout, tiling), zero
+    # retraces across rounds, no host transfers.  The roofline ratchet
+    # stays on the base cohort program only.
+    from repro.kernels import fedavg_agg
+    import jax.numpy as jnp
+    agg_rng = np.random.RandomState(1)
+    agg_u = jnp.asarray(agg_rng.randn(16, 256).astype(np.float32))
+    agg_w = jnp.asarray(
+        (np.ones(16) / 16).astype(np.float32))
+    tree_args = (agg_u, agg_w)
+    tree_kw = dict(fanout=4, use_kernel=True, interpret=True,
+                   tile_d=fedavg_agg.TILE_D, tile_n=fedavg_agg.TILE_N)
+    fedavg_agg._tree_padded.clear_cache()
+    tt0 = fedavg_agg.tree_trace_count()
+    jax.block_until_ready(fedavg_agg._tree_padded(*tree_args, **tree_kw))
+    report.tree_traces_first_round = fedavg_agg.tree_trace_count() - tt0
+    jax.block_until_ready(fedavg_agg._tree_padded(*tree_args, **tree_kw))
+    report.tree_retraces = (fedavg_agg.tree_trace_count() - tt0
+                            - report.tree_traces_first_round)
+    if report.tree_traces_first_round > trace_budget:
+        report.violations.append(
+            f"retrace budget (hierarchical agg): "
+            f"{report.tree_traces_first_round} trace(s) for one "
+            f"(cohort, fanout) combination, budget is {trace_budget}")
+    if report.tree_retraces != 0:
+        report.violations.append(
+            f"retrace budget (hierarchical agg): {report.tree_retraces} "
+            f"retrace(s) across rounds at fixed shapes (expected 0)")
+    report.tree_host_transfer_ops = _host_transfer_ops(
+        fedavg_agg._tree_padded.lower(
+            *tree_args, **tree_kw).compile().as_text())
+    if report.tree_host_transfer_ops:
+        report.violations.append(
+            "host transfers in the hierarchical aggregation program: "
+            + ", ".join(report.tree_host_transfer_ops))
 
     cost = analyze_hlo(hlo)
     report.flops = cost.flops

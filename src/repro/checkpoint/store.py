@@ -4,7 +4,13 @@ The tree is whatever the trainer considers trainable state — full model
 params, or only the LoRA adapter tree under ``client.finetune = "lora"``
 (the frozen base is reconstructed from ``cfg.seed`` at resume, never
 persisted; ``Trainer.resume`` refuses checkpoints whose recorded
-``finetune`` mode mismatches the config)."""
+``finetune`` mode mismatches the config).
+
+Tiered client state checkpoints tier-agnostically: the batched executor's
+error-feedback store snapshots every residual row — device-resident *and*
+host-spilled — as per-client numpy rows (``BatchedExecutor.ef_state``), so
+a run that spilled cold clients to the host resumes bit-identically to one
+that never did, regardless of either side's device-tier capacity."""
 from __future__ import annotations
 
 import os

@@ -35,16 +35,28 @@ def weighted_train_loss(results: List[Dict]) -> float:
 
 
 def weighted_average(updates: List[PyTree], weights: np.ndarray,
-                     use_kernel: bool = False) -> PyTree:
-    """Weighted mean over a list of pytrees (equal structure)."""
+                     use_kernel: bool = False, topology: str = "flat",
+                     fanout: int = 0) -> PyTree:
+    """Weighted mean over a list of pytrees (equal structure).
+
+    ``topology="hierarchical"`` routes the flattened matrix through the
+    edge→region→global reduction tree
+    (``kernels.fedavg_agg.fedavg_aggregate_tree``) with ``fanout``
+    children per node — bit-equal to flat when ``fanout >= len(updates)``.
+    """
     weights = jnp.asarray(weights, jnp.float32)
 
-    if use_kernel:
+    if use_kernel or topology == "hierarchical":
         from jax.flatten_util import ravel_pytree
         from repro.kernels import ops as kops
         flats = [ravel_pytree(u)[0] for u in updates]
         unravel = ravel_pytree(updates[0])[1]
         stacked = jnp.stack(flats)               # (N, D)
+        if topology == "hierarchical":
+            from repro.kernels.fedavg_agg import fedavg_aggregate_tree
+            return unravel(fedavg_aggregate_tree(
+                stacked, weights, fanout=fanout, use_kernel=use_kernel,
+                interpret=kops.get_interpret(None) if use_kernel else True))
         return unravel(kops.fedavg_aggregate(stacked, weights))
 
     def avg(*leaves):
@@ -58,7 +70,9 @@ def staleness_weighted_delta(updates: List[PyTree],
                              num_samples: Sequence[int],
                              staleness: Sequence[float],
                              power: float = 0.5,
-                             use_kernel: bool = False) -> PyTree:
+                             use_kernel: bool = False,
+                             topology: str = "flat",
+                             fanout: int = 0) -> PyTree:
     """FedBuff-style aggregate: sample-weighted mean with stale updates
     discounted by ``1/(1+s)^power`` (Nguyen et al., AISTATS'22).
 
@@ -71,7 +85,8 @@ def staleness_weighted_delta(updates: List[PyTree],
     w = np.asarray(fold_staleness(jnp.asarray(fedavg_weights(num_samples)),
                                   jnp.asarray(staleness, jnp.float32),
                                   power))
-    return weighted_average(updates, w, use_kernel=use_kernel)
+    return weighted_average(updates, w, use_kernel=use_kernel,
+                            topology=topology, fanout=fanout)
 
 
 def apply_delta(global_params: PyTree, delta: PyTree,
@@ -84,9 +99,11 @@ def apply_delta(global_params: PyTree, delta: PyTree,
 
 def fedavg(global_params: PyTree, updates: List[PyTree],
            num_samples: Sequence[int], use_kernel: bool = False,
-           server_lr: float = 1.0) -> PyTree:
+           server_lr: float = 1.0, topology: str = "flat",
+           fanout: int = 0) -> PyTree:
     """Apply the weighted-average *update* (delta) to the global params."""
-    delta = weighted_average(updates, fedavg_weights(num_samples), use_kernel)
+    delta = weighted_average(updates, fedavg_weights(num_samples), use_kernel,
+                             topology=topology, fanout=fanout)
     return apply_delta(global_params, delta, server_lr)
 
 

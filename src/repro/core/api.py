@@ -14,13 +14,18 @@ Categories:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.client import Client
 from repro.core.config import Config
 from repro.core.rounds import Trainer
 from repro.core.server import Server
-from repro.data.fed_data import FederatedDataset, build_federated_data
+from repro.data.fed_data import (
+    ClientData, FederatedDataset, VirtualFederatedDataset,
+    build_federated_data,
+)
 from repro.data.fed_data import register_dataset as _register_dataset
 from repro.models.registry import (
     DATASET_DEFAULT_MODEL, get_model, register_model as _register_model,
@@ -52,17 +57,72 @@ _ctx = _Context()
 # ---------------------------------------------------------------------------
 
 
+@functools.lru_cache(maxsize=1)
+def _flat_key_sections() -> Dict[str, List[str]]:
+    """Leaf field name -> the config sections that declare it, derived
+    from the :class:`Config` dataclass tree (never hand-maintained).
+
+    Powers the low-code flat-key fold in :func:`init`: any leaf name
+    declared by exactly one section can be passed at the top level of the
+    ``init`` dict.  Names declared by several sections (``seed``,
+    ``compression``, ...) are ambiguous and must be nested."""
+    out: Dict[str, List[str]] = {}
+    top = Config()
+    for f in dataclasses.fields(Config):
+        section = getattr(top, f.name)
+        if dataclasses.is_dataclass(section):
+            for leaf in dataclasses.fields(type(section)):
+                out.setdefault(leaf.name, []).append(f.name)
+    return out
+
+
+def _fold_flat_keys(configs: Dict[str, Any]) -> Dict[str, Any]:
+    """Fold unambiguous flat leaf keys into their nested section.
+
+    ``{"dataset": "femnist"}`` -> ``{"data": {"dataset": "femnist"}}``;
+    so for ``lora_rank``, ``clients_per_round``, ``aggregation_topology``,
+    and every other single-owner leaf.  Top-level ``Config`` fields
+    (``model``, ``seed``, ``task_id``) are left alone; ambiguous leaves
+    raise a ``KeyError`` naming every candidate path; unknown keys fall
+    through to ``Config.make`` which raises its own loud error."""
+    sections = _flat_key_sections()
+    top_fields = {f.name for f in dataclasses.fields(Config)}
+    for key in [k for k in configs
+                if k not in top_fields and k in sections]:
+        owners = sections[key]
+        if len(owners) > 1:
+            raise KeyError(
+                f"flat config key {key!r} is ambiguous: "
+                + " vs ".join(f"{s}.{key}" for s in owners)
+                + " — pass it nested, e.g. "
+                + f"{{{owners[0]!r}: {{{key!r}: ...}}}}")
+        sec = owners[0]
+        if (isinstance(configs.get(sec), dict)
+                and key in configs[sec]
+                and configs[sec][key] != configs[key]):
+            raise KeyError(
+                f"flat config key {key!r} conflicts with nested "
+                f"{sec}.{key}: {configs[key]!r} != {configs[sec][key]!r}")
+        configs.setdefault(sec, {})
+        configs[sec] = {**configs[sec], key: configs.pop(key)}
+    return configs
+
+
 def init(configs: Optional[Dict[str, Any]] = None) -> Config:
     """Initialize the platform: merge configs with defaults, set up the
     simulation environment (data manager + simulation manager).
 
     Args:
         configs: nested override dict matching the ``Config`` tree (see
-            docs/config.md for every knob).  Low-code conveniences: a flat
-            ``{"dataset": ...}`` is folded into ``data.dataset``, and when
-            ``"model"`` is omitted it is derived from the dataset.  Unknown
-            keys raise ``KeyError`` (no silent typos); an unregistered
-            model name raises ``KeyError`` here, not at ``run()``.
+            docs/config.md for every knob).  Low-code conveniences: any
+            flat leaf key owned by exactly one config section is folded
+            into it (``{"dataset": ...}`` -> ``data.dataset``,
+            ``{"lora_rank": 4}`` -> ``client.lora_rank``, ...); a leaf
+            owned by several sections raises ``KeyError`` naming every
+            candidate path.  When ``"model"`` is omitted it is derived
+            from the dataset.  Unknown keys raise ``KeyError`` (no silent
+            typos); an unregistered model name raises ``KeyError`` here,
+            not at ``run()``.
 
     Returns:
         The merged, immutable :class:`repro.core.config.Config`.
@@ -71,16 +131,7 @@ def init(configs: Optional[Dict[str, Any]] = None) -> Config:
     tracking manager; resets any previous trainer.  Call :func:`reset`
     between independent runs in one process — the context is global.
     """
-    configs = dict(configs or {})
-    # low-code conveniences: allow flat {"model": ..., "dataset": ...}
-    if "dataset" in configs:
-        configs.setdefault("data", {})
-        configs["data"] = {**configs["data"], "dataset": configs.pop("dataset")}
-    # ... and flat fine-tuning knobs ({"finetune": "lora", "lora_rank": 4})
-    for key in ("finetune", "lora_rank", "lora_alpha", "lora_targets"):
-        if key in configs:
-            configs.setdefault("client", {})
-            configs["client"] = {**configs["client"], key: configs.pop(key)}
+    configs = _fold_flat_keys(dict(configs or {}))
     if "model" not in configs:
         ds = configs.get("data", {}).get("dataset", Config().data.dataset)
         configs["model"] = DATASET_DEFAULT_MODEL.get(ds, "femnist_cnn")
@@ -91,7 +142,8 @@ def init(configs: Optional[Dict[str, Any]] = None) -> Config:
         _ctx.fed_data = _ctx._registered_train
     else:
         _ctx.fed_data = build_federated_data(cfg.data)
-    _ctx.tracker = Tracker(cfg.tracking.backend, cfg.tracking.out_dir)
+    _ctx.tracker = Tracker(cfg.tracking.backend, cfg.tracking.out_dir,
+                           client_history_rounds=cfg.tracking.client_history_rounds)
     _ctx.trainer = None
     return cfg
 
@@ -101,23 +153,45 @@ def init(configs: Optional[Dict[str, Any]] = None) -> Config:
 # ---------------------------------------------------------------------------
 
 
-def register_dataset(train, test=None) -> None:
-    """Register an external dataset.
+def register_dataset(train, test=None, name: Optional[str] = None) -> None:
+    """Register an external dataset — the symmetric counterpart of
+    ``build_federated_data``.
 
-    Args:
-        train: a :class:`repro.data.fed_data.FederatedDataset` (adopted
-            directly as the training federation) or an object with a
-            ``name`` attribute to register under that name for
-            ``data.dataset`` lookup.
-        test: unused for ``FederatedDataset`` (it carries its own test
-            split); reserved for name-registered datasets.
+    Two forms, with identical ``test`` semantics:
+
+    * ``train`` is a :class:`repro.data.fed_data.FederatedDataset` (or a
+      virtual one): adopted directly as the training federation.  ``test``
+      (a ``ClientData`` or anything with ``.x``/``.y``) replaces its
+      held-out split; omitted, the dataset keeps its own.
+    * anything else (a ``RawDataset`` or a ``(seed=...) -> RawDataset``
+      factory): registered for ``data.dataset`` lookup under ``name`` (or
+      the object's ``name`` attribute).  A missing name raises
+      ``ValueError`` — nothing is silently filed under a made-up name.
+      ``test`` becomes the federation's test split and the full training
+      data is partitioned across clients; omitted, 10% is carved off.
+
+    Call before :func:`init` (or before the next ``run()``) — an adopted
+    federation also replaces the active one immediately.
     """
-    if isinstance(train, FederatedDataset):
+    if isinstance(train, (FederatedDataset, VirtualFederatedDataset)):
+        if test is not None:
+            cd = test if isinstance(test, ClientData) else ClientData(
+                test.x, test.y)
+            if isinstance(train, FederatedDataset):
+                train = dataclasses.replace(train, test=cd)
+            else:
+                train.test = cd
         _ctx._registered_train = train
-    else:
-        _register_dataset(getattr(train, "name", "registered"), train)
-    if _ctx.config is not None and isinstance(train, FederatedDataset):
-        _ctx.fed_data = train
+        if _ctx.config is not None:
+            _ctx.fed_data = train
+        return
+    name = name or getattr(train, "name", None)
+    if not name:
+        raise ValueError(
+            "register_dataset: a name-registered dataset needs a real "
+            "name — pass name=... or give the object a .name attribute "
+            "(then select it with init({'dataset': <name>}))")
+    _register_dataset(name, train, test=test)
 
 
 def register_model(model) -> None:

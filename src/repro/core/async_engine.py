@@ -176,13 +176,29 @@ class AsyncEngine:
             free = self.max_concurrency - len(in_flight)
             budget = (state["total_needed"] - state["completed"]
                       - len(in_flight))
-            avail = [c for c in state["all_ids"] if c not in in_flight
-                     and state["cooldown"].get(c, 0.0) <= now]
-            m = min(free, budget, len(avail))
-            if m <= 0:
-                return
-            wave = state["wave_id"]
-            selected = server.selection(avail, wave)[:m]
+            all_ids = state["all_ids"]
+            if hasattr(all_ids, "sample"):
+                # virtual population: O(cohort) draw excluding busy /
+                # cooling clients (both sets are O(concurrency)) instead
+                # of an O(population) availability scan
+                state["cooldown"] = {c: t for c, t
+                                     in state["cooldown"].items() if t > now}
+                busy = set(in_flight)
+                busy.update(state["cooldown"])
+                m = min(free, budget, len(all_ids) - len(busy),
+                        self.cfg.server.clients_per_round)
+                if m <= 0:
+                    return
+                wave = state["wave_id"]
+                selected = all_ids.sample(server.rng, m, exclude=busy)
+            else:
+                avail = [c for c in all_ids if c not in in_flight
+                         and state["cooldown"].get(c, 0.0) <= now]
+                m = min(free, budget, len(avail))
+                if m <= 0:
+                    return
+                wave = state["wave_id"]
+                selected = server.selection(avail, wave)[:m]
             if not selected:
                 return
             payload = server.distribution(selected)
@@ -296,7 +312,9 @@ class AsyncEngine:
             delta = staleness_weighted_delta(
                 updates, [r["num_samples"] for r in results], staleness,
                 power=self.staleness_power,
-                use_kernel=self.cfg.resources.aggregation_kernel)
+                use_kernel=self.cfg.resources.aggregation_kernel,
+                topology=self.cfg.resources.aggregation_topology,
+                fanout=self.cfg.resources.aggregation_fanout)
             self.server.apply_delta(delta)
         self.version += 1
 
@@ -365,9 +383,13 @@ class AsyncEngine:
         re-expands, so replacements dispatch until the target is met or
         the failure cap trips."""
         target = self.target
+        # lazy id spaces (virtual populations) are kept as-is — the
+        # dispatch loop samples them in O(cohort); materializing a
+        # million-id list here would dominate round memory
+        ids = self.trainer.fed_data.client_ids
         state: Dict[str, Any] = {
             "heap": [], "in_flight": set(),
-            "all_ids": list(self.trainer.fed_data.client_ids),
+            "all_ids": ids if hasattr(ids, "sample") else list(ids),
             "seq": 0, "wave_id": 0, "completed": 0,
             "total_needed": target * self.K,
             "down_bytes": 0, "up_bytes": 0,

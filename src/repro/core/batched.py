@@ -292,10 +292,17 @@ class BatchedExecutor:
     set (tests use prefixes of the host platform's forced devices to prove
     shard-count invariance)."""
 
-    #: bound on the device-resident per-client data pool (rows); when a
-    #: federation touches more clients than this, the pool resets rather
-    #: than growing without limit
+    #: bound on the *device-resident* tier of the per-client data pool
+    #: (rows).  Cold clients beyond the bound are LRU-evicted and cost
+    #: zero storage — their padded rows are recomputed from ``c.data``
+    #: (itself regenerated on demand for virtual datasets) on the next
+    #: selection.  A cohort larger than the bound pins the tier open for
+    #: its round, so device memory is ``max(bound, cohort)`` rows.
     DATA_POOL_MAX_CLIENTS = 1024
+    #: bound on the device-resident tier of the error-feedback residual
+    #: store; evicted residuals spill to pinned host numpy copies and
+    #: reload bit-identically (residuals are state, not recomputable)
+    EF_MAX_CLIENTS = 1024
 
     def __init__(self, model: FLModel, distributed: str = "none",
                  devices: Optional[Sequence] = None):
@@ -307,21 +314,35 @@ class BatchedExecutor:
         self.distributed = distributed
         self.mesh = (build_client_mesh(devices)
                      if distributed == "data" else None)
-        # device-side per-client data pool: each client's (maxn, ...)
-        # padded x/y rows are uploaded host->device ONCE (datasets are
-        # static); cohorts are assembled by a device-side row gather, so
+        # tiered per-client data pool (repro.core.tiered_store): each
+        # client's (maxn, ...) padded x/y rows upload host->device once
+        # while hot; cohorts are assembled by a device-side row gather, so
         # arbitrary selection order / composition (random permutations,
-        # async waves) all hit the pool — row 0 is reserved all-zero and
-        # backs the bucket-padding rows
-        self._data_pool: Optional[Dict[str, Any]] = None
-        # error-feedback residual store for in-program compression:
-        # client id -> row in the per-leaf (capacity, leaf_size) matrices
-        # of ``_ef_store`` (device-resident f32; rows are gathered into
-        # the stacked cohort before compression and scattered back after,
-        # so round-over-round semantics match ``Client._residual`` exactly
-        # — including across async waves, which share this executor)
-        self._ef_rows: Dict[str, int] = {}
-        self._ef_store: List[Any] = []
+        # async waves) all hit the pool.  Eviction drops the row — data is
+        # recomputable from ``c.data``, so the cold tier costs nothing.
+        self._pool = None              # lazily-built TieredRowStore
+        self._pool_maxn = 0
+        self._pool_sig = None          # (x tail shape/dtype, y ditto)
+        # tiered error-feedback residual store for in-program compression:
+        # hot rows live in per-leaf (alloc, leaf_size) device matrices,
+        # evicted rows spill to host and reload bit-identically, so
+        # round-over-round semantics match ``Client._residual`` exactly —
+        # including across async waves, which share this executor
+        self._ef = None                # lazily-built TieredRowStore
+
+    # ------------------------------------------------------------------
+    @property
+    def _data_pool(self) -> Optional[Dict[str, Any]]:
+        """Read-only view of the pooled device data (tests/diagnostics)."""
+        if self._pool is None or not self._pool.leaves:
+            return None
+        return {"rows": dict(self._pool.rows), "maxn": self._pool_maxn,
+                "x": self._pool.leaves[0], "y": self._pool.leaves[1]}
+
+    @property
+    def _ef_rows(self) -> Dict[str, int]:
+        """Hot-tier residual row map (tests/diagnostics)."""
+        return dict(self._ef.rows) if self._ef is not None else {}
 
     # ------------------------------------------------------------------
     def _batch_indices(self, client, round_id: int) -> np.ndarray:
@@ -342,74 +363,66 @@ class BatchedExecutor:
         call this — with the client id, or without arguments to drop the
         whole pool — or the batched/async fast path keeps training on the
         first-round snapshot."""
-        if self._data_pool is None:
+        if self._pool is None:
             return
         if client_id is None:
-            self._data_pool = None
+            self._pool = None
         else:
-            # forget the row; the stale device row is simply never
-            # gathered again and the client re-uploads on next selection
-            self._data_pool["rows"].pop(client_id, None)
+            # free the row slot; the client re-uploads on next selection
+            self._pool.drop(client_id)
 
     # ------------------------------------------------------------------
     def _stacked_data(self, clients: Sequence, n_bucket: int, maxn: int):
-        """Stacked (N_bucket, maxn, ...) cohort x/y from the device pool.
+        """Stacked (N_bucket, maxn, ...) cohort x/y from the tiered pool.
 
         Client datasets are static (see :meth:`invalidate_data` for the
         escape hatch), so each client's padded data rows are built +
-        uploaded host->device only the first time the client appears;
-        every later round — regardless of selection order or cohort
-        composition (random permutations, async replacement waves) —
-        assembles the cohort with one device-side row gather.  Only the
-        shuffled batch *indices* are rebuilt per round.  The pool's
+        uploaded host->device only when the client is (re)admitted to the
+        hot tier; while hot, every round — regardless of selection order
+        or cohort composition (random permutations, async replacement
+        waves) — assembles the cohort with one device-side row gather,
+        and only the shuffled batch *indices* are rebuilt per round.
+        Beyond ``DATA_POOL_MAX_CLIENTS`` resident clients the pool
+        LRU-evicts: data rows are recomputable from ``c.data`` (and for
+        virtual datasets ``c.data`` itself regenerates from the seed), so
+        eviction just drops the row and cold clients cost zero storage —
+        device memory stays flat as the population grows.  The pool's
         sample-dim padding grows monotonically to the bucketed federation
-        max (a handful of recompiles at most), and the pool resets when a
-        federation touches more than ``DATA_POOL_MAX_CLIENTS`` clients.
-        Under the client mesh the gathered cohort is placed on its
-        ``NamedSharding`` so jit never re-shards it."""
+        max (a handful of recompiles at most).  Under the client mesh the
+        gathered cohort is placed on its ``NamedSharding`` so jit never
+        re-shards it."""
+        from repro.core.tiered_store import TieredRowStore
+
         x0 = np.asarray(clients[0].data.x)
         y0 = np.asarray(clients[0].data.y)
-        pool = self._data_pool
-        if pool is not None:
-            fresh = sum(c.client_id not in pool["rows"] for c in clients)
-            # bound the *storage* rows (minus the zero row), not the id
-            # map: invalidate_data orphans storage rows, and orphans must
-            # still count toward the memory bound or repeated
-            # invalidate+re-upload cycles would grow the pool unbounded
-            if (pool["x"].shape[2:] != x0.shape[1:]
-                    or pool["x"].dtype != x0.dtype
-                    or pool["x"].shape[0] - 1 + fresh
-                    > self.DATA_POOL_MAX_CLIENTS):
-                pool = None            # dataset changed / pool full: reset
-        if pool is None:
-            pool = {"rows": {}, "maxn": maxn,
-                    "x": jnp.zeros((1, maxn) + x0.shape[1:], x0.dtype),
-                    "y": jnp.zeros((1, maxn) + y0.shape[1:], y0.dtype)}
-            self._data_pool = pool
-        if maxn > pool["maxn"]:
-            pad = ((0, 0), (0, maxn - pool["maxn"]))
-            pool["x"] = jnp.pad(pool["x"],
-                                pad + ((0, 0),) * (pool["x"].ndim - 2))
-            pool["y"] = jnp.pad(pool["y"],
-                                pad + ((0, 0),) * (pool["y"].ndim - 2))
-            pool["maxn"] = maxn
-        new = [c for c in clients if c.client_id not in pool["rows"]]
-        if new:
-            nx = np.zeros((len(new), pool["maxn"]) + x0.shape[1:], x0.dtype)
-            ny = np.zeros((len(new), pool["maxn"]) + y0.shape[1:], y0.dtype)
-            for i, c in enumerate(new):
-                n = len(c.data)
-                nx[i, :n] = c.data.x
-                ny[i, :n] = c.data.y
-            base = pool["x"].shape[0]
-            pool["x"] = jnp.concatenate([pool["x"], jnp.asarray(nx)])
-            pool["y"] = jnp.concatenate([pool["y"], jnp.asarray(ny)])
-            for i, c in enumerate(new):
-                pool["rows"][c.client_id] = base + i
-        rows = np.zeros((n_bucket,), np.int32)      # row 0 = zero padding
-        rows[: len(clients)] = [pool["rows"][c.client_id] for c in clients]
-        xd = jnp.take(pool["x"], jnp.asarray(rows), axis=0)
-        yd = jnp.take(pool["y"], jnp.asarray(rows), axis=0)
+        sig = (x0.shape[1:], x0.dtype, y0.shape[1:], y0.dtype)
+        if self._pool is not None and self._pool_sig != sig:
+            self._pool = None          # dataset/shape changed: reset
+        if self._pool is None:
+            self._pool = TieredRowStore(self.DATA_POOL_MAX_CLIENTS,
+                                        spill="drop", name="data-pool")
+            self._pool_sig = sig
+            self._pool_maxn = maxn
+        if maxn > self._pool_maxn:
+            self._pool.pad_dim1(maxn)
+            self._pool_maxn = maxn
+        by_id = {c.client_id: c for c in clients}
+        width = self._pool_maxn
+
+        def make_row(cid):             # recompute path: re-pad from c.data
+            c = by_id[cid]
+            n = len(c.data)
+            nx = np.zeros((width,) + x0.shape[1:], x0.dtype)
+            ny = np.zeros((width,) + y0.shape[1:], y0.dtype)
+            nx[:n] = c.data.x
+            ny[:n] = c.data.y
+            return [nx, ny]
+
+        xd, yd = self._pool.gather([c.client_id for c in clients], make_row)
+        padn = n_bucket - len(clients)
+        if padn:                       # bucket padding: all-zero rows
+            xd = jnp.pad(xd, ((0, padn),) + ((0, 0),) * (xd.ndim - 1))
+            yd = jnp.pad(yd, ((0, padn),) + ((0, 0),) * (yd.ndim - 1))
         if self.mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -616,63 +629,64 @@ class BatchedExecutor:
     # In-program compression (error feedback on device, per client id)
     # ------------------------------------------------------------------
     def _ef_gather(self, clients: Sequence, leaves: List[Any]) -> List[Any]:
-        """Fetch (creating/growing storage as needed) the cohort's
-        error-feedback residual rows, one (N, leaf_size) f32 matrix per
-        update leaf.  Rows are keyed by client id — the store doubles in
-        capacity as new clients appear (append-only row indices, so async
-        waves hit the same rows round after round).  Under the client mesh
-        the store itself stays sharded along its row axis, so the
+        """Fetch the cohort's error-feedback residual rows, one
+        (N, leaf_size) f32 matrix per update leaf, from the tiered store.
+        Rows are keyed by client id: hot rows gather straight off the
+        device, spilled rows reload from their pinned host copies
+        bit-identically, never-seen clients start from zero — so async
+        waves and million-client populations hit the same residual
+        semantics as the original device-only store.  Under the client
+        mesh the hot tier stays sharded along its row axis, so the
         round-trip gather/scatter never funnels residuals through one
         device."""
+        from repro.core.tiered_store import TieredRowStore
+
         sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
-        if not self._ef_store:
-            self._ef_store = [jnp.zeros((0, s), jnp.float32) for s in sizes]
-        if [l.shape[1] for l in self._ef_store] != sizes:
+        if self._ef is None:
+            self._ef = TieredRowStore(self.EF_MAX_CLIENTS, spill="host",
+                                      mesh=self.mesh, name="ef-store")
+        if self._ef.leaves and \
+                [l.shape[1] for l in self._ef.leaves] != sizes:
             raise ValueError(
                 "error-feedback store leaf sizes "
-                f"{[l.shape[1] for l in self._ef_store]} do not match the "
+                f"{[l.shape[1] for l in self._ef.leaves]} do not match the "
                 f"update structure {sizes}; one executor serves one model")
-        for c in clients:
-            if c.client_id not in self._ef_rows:
-                self._ef_rows[c.client_id] = len(self._ef_rows)
-        need = len(self._ef_rows)
-        cap = self._ef_store[0].shape[0]
-        if need > cap:
-            floor = 8 if self.mesh is None else max(8, self.mesh.size)
-            newcap = bucket_pow2(need, floor=floor)
-            self._ef_store = [
-                jnp.pad(m, ((0, newcap - cap), (0, 0)))
-                for m in self._ef_store]
-            if self.mesh is not None:
-                from jax.sharding import NamedSharding, PartitionSpec as P
-
-                sh = NamedSharding(self.mesh, P(CLIENT_AXIS, None))
-                self._ef_store = [jax.device_put(m, sh)
-                                  for m in self._ef_store]
-        rows = np.asarray([self._ef_rows[c.client_id] for c in clients])
-        return [m[rows] for m in self._ef_store], rows
+        ids = [c.client_id for c in clients]
+        res = self._ef.gather(
+            ids, lambda cid: [np.zeros((s,), np.float32) for s in sizes])
+        return res, ids
 
     # ------------------------------------------------------------------
     def ef_state(self) -> Dict[str, Any]:
         """Serializable snapshot of the error-feedback residual store
-        (checkpointing — ``Trainer.save_checkpoint``).  Host np copies;
-        the row map keys compression continuity per client id across a
-        kill/resume boundary."""
-        return {"rows": dict(self._ef_rows),
-                "store": [np.asarray(m) for m in self._ef_store]}
+        (checkpointing — ``Trainer.save_checkpoint``).  Per-client host
+        np copies drawn from BOTH tiers (hot device rows leave in one
+        batched fetch; spilled rows are already host-resident), so a
+        kill/resume boundary reproduces every residual bit-identically
+        regardless of which tier held it."""
+        if self._ef is None:
+            return {"format": 2, "clients": {}}
+        state = self._ef.state()
+        state["format"] = 2
+        return state
 
     def load_ef_state(self, state: Dict[str, Any]) -> None:
-        """Restore :meth:`ef_state` (re-sharding onto the client mesh)."""
-        self._ef_rows = {str(k): int(v)  # flcheck: ignore[FLC102]  -- checkpoint dict holds host ints
-                         for k, v in state["rows"].items()}
-        store = [jnp.asarray(np.asarray(m, np.float32))
-                 for m in state["store"]]
-        if self.mesh is not None and store:
-            from jax.sharding import NamedSharding, PartitionSpec as P
+        """Restore :meth:`ef_state` into the warm tier (rows re-heat — and
+        re-shard onto the client mesh — on their next gather).  Accepts
+        the legacy dense ``{"rows", "store"}`` snapshot format too."""
+        from repro.core.tiered_store import TieredRowStore
 
-            sh = NamedSharding(self.mesh, P(CLIENT_AXIS, None))
-            store = [jax.device_put(m, sh) for m in store]
-        self._ef_store = store
+        self._ef = TieredRowStore(self.EF_MAX_CLIENTS, spill="host",
+                                  mesh=self.mesh, name="ef-store")
+        if "clients" in state:
+            self._ef.load_state(state)
+            return
+        rows = {str(k): int(v)  # flcheck: ignore[FLC102]  -- checkpoint dict holds host ints
+                for k, v in state.get("rows", {}).items()}
+        store = [np.asarray(m, np.float32) for m in state.get("store", [])]
+        self._ef.load_state(
+            {"clients": {cid: [m[r] for m in store]
+                         for cid, r in rows.items()}})
 
     # ------------------------------------------------------------------
     def compress_stacked(self, st: Dict[str, Any], clients: Sequence,
@@ -712,7 +726,7 @@ class BatchedExecutor:
         leaves, treedef = jax.tree_util.tree_flatten(st["updates"])
         nb = leaves[0].shape[0]
         n = len(clients)
-        residuals, rows = self._ef_gather(clients, leaves)
+        residuals, ids = self._ef_gather(clients, leaves)
         itp = kops.get_interpret(interpret)
         sharding = None
         if self.mesh is not None:
@@ -740,8 +754,7 @@ class BatchedExecutor:
             new_res.append((corrected - sent)[:n])
             sent_leaves.append(sent.reshape(leaf.shape))
             nnz_list.append(nnz)
-        self._ef_store = [
-            m.at[rows].set(r) for m, r in zip(self._ef_store, new_res)]
+        self._ef.scatter(ids, new_res)
         out = dict(st)
         out["updates"] = jax.tree_util.tree_unflatten(treedef, sent_leaves)
         out["nnz"] = nnz_list
@@ -786,7 +799,9 @@ class BatchedExecutor:
                           use_kernel: bool = False,
                           mask: Optional[np.ndarray] = None,
                           guard: bool = False,
-                          max_update_norm: float = 0.0) -> PyTree:
+                          max_update_norm: float = 0.0,
+                          topology: str = "flat",
+                          fanout: int = 0) -> PyTree:
         """FedAvg delta from stacked updates without per-client gathering.
 
         Flattens the stacked update pytree to (N_bucket, D) and reduces it
@@ -811,10 +826,18 @@ class BatchedExecutor:
         the per-client verdict lands in ``st["guard_ok"]`` (device (N_b,)
         bool) for fault accounting.  All of this is skipped — the weight
         vector and program are byte-identical to a fault-free build — when
-        ``mask``/``guard`` are left at their defaults."""
+        ``mask``/``guard`` are left at their defaults.
+
+        ``topology="hierarchical"`` reduces through the edge→region→global
+        tree (``fedavg_aggregate_tree``; per-shard tree + ``psum`` top
+        tier under the mesh) with ``fanout`` children per node; every
+        tier is linear in the weight vector, so staleness folding, fault
+        masking and compressed updates compose unchanged, and
+        ``fanout >= cohort`` reproduces the flat result bit-for-bit."""
         from repro.core.aggregation import fedavg_weights
         from repro.kernels import ops as kops
-        from repro.kernels.fedavg_agg import fedavg_aggregate_sharded
+        from repro.kernels.fedavg_agg import (fedavg_aggregate_sharded,
+                                              fedavg_aggregate_tree)
 
         leaves, treedef = jax.tree_util.tree_flatten(st["updates"])
         nb = leaves[0].shape[0]
@@ -846,10 +869,17 @@ class BatchedExecutor:
             # (params unchanged) instead of a 0/0 NaN
             wj = jnp.where(wsum > 0, wj / wsum, 0.0)
             w = wj
+        tree = topology == "hierarchical"
         if self.mesh is not None:
             delta = fedavg_aggregate_sharded(
                 flat, jnp.asarray(w), self.mesh,
-                interpret=kops.get_interpret(interpret))
+                interpret=kops.get_interpret(interpret),
+                fanout=(fanout or int(np.ceil(np.sqrt(nb)))) if tree else 0)
+        elif tree:
+            delta = fedavg_aggregate_tree(
+                flat, jnp.asarray(w), fanout=fanout, use_kernel=use_kernel,
+                interpret=kops.get_interpret(interpret) if use_kernel
+                else True)
         elif use_kernel:
             delta = kops.fedavg_aggregate(flat, jnp.asarray(w),
                                           interpret=interpret)

@@ -111,6 +111,14 @@ class DataConfig:
     batch_size: int = 64              # paper default B=64
     test_batch_size: int = 256
     seed: int = 0
+    # Virtual (lazy) populations: "auto" virtualizes synthetic datasets
+    # once num_clients exceeds the materialization threshold (10k), "on"
+    # forces it, "off" always materializes every partition up front.
+    # Virtual clients are generated on demand from (dataset, seed,
+    # client index) — cold clients cost zero storage (docs/scale.md).
+    virtual: str = "auto"             # auto | on | off
+    samples_per_client: int = 0       # virtual datasets: samples per client
+    #                                   (0 -> dataset default, 32)
 
 
 @dataclass(frozen=True)
@@ -457,6 +465,14 @@ class ResourceConfig:
     distributed: str = "none"         # none | data (shard cohort over mesh)
     execution: str = "sequential"     # sequential | batched | async
     aggregation_kernel: bool = False  # FedAvg via the Pallas streaming kernel
+    # Aggregation reduction topology: "flat" is the single weighted sum;
+    # "hierarchical" reduces the cohort through an edge->region->global
+    # tree of streaming tiers with aggregation_fanout children per node
+    # (repro.kernels.fedavg_agg.fedavg_aggregate_tree; docs/scale.md).
+    # Bit-equal to flat when the fanout covers the whole cohort.
+    aggregation_topology: str = "flat"   # flat | hierarchical
+    aggregation_fanout: int = 0       # children per tree node (0 = sqrt(N);
+    #                                   >= 2 otherwise)
     # --- async (execution="async") knobs ---
     buffer_size: int = 0              # K: aggregate every K completions
     #                                   (0 -> server.clients_per_round)
@@ -506,6 +522,14 @@ def validate_resource_config(cfg: "ResourceConfig") -> None:
         raise ValueError(
             f"resources.round_deadline must be a finite float >= 0 "
             f"(0 = wait forever), got {cfg.round_deadline}")
+    if cfg.aggregation_topology not in ("flat", "hierarchical"):
+        raise ValueError(
+            f"unknown aggregation_topology {cfg.aggregation_topology!r}; "
+            f"expected 'flat' or 'hierarchical'")
+    if cfg.aggregation_fanout < 0 or cfg.aggregation_fanout == 1:
+        raise ValueError(
+            f"resources.aggregation_fanout must be 0 (auto, ~sqrt(N)) or "
+            f">= 2, got {cfg.aggregation_fanout}")
 
 
 @dataclass(frozen=True)
@@ -513,6 +537,11 @@ class TrackingConfig:
     enabled: bool = True
     backend: str = "memory"           # memory | jsonl
     out_dir: str = "artifacts/tracking"
+    # Bound on in-memory per-client metric rows: keep client-level rows
+    # for only the most recent N rounds (round-level metrics are always
+    # retained).  0 = unbounded — fine for small federations; set a bound
+    # for million-client populations so tracking stays O(cohort).
+    client_history_rounds: int = 0
 
 
 @dataclass(frozen=True)
@@ -564,6 +593,19 @@ def validate_config(cfg: "Config") -> None:
         raise ValueError(
             f"data.batch_size={cfg.data.batch_size!r} is invalid; "
             f"expected an int >= 1")
+    if cfg.data.virtual not in ("auto", "on", "off"):
+        raise ValueError(
+            f"data.virtual={cfg.data.virtual!r} is invalid; expected "
+            f"'auto', 'on' or 'off'")
+    if cfg.data.samples_per_client < 0:
+        raise ValueError(
+            f"data.samples_per_client={cfg.data.samples_per_client!r} is "
+            f"invalid; expected an int >= 0 (0 = dataset default)")
+    if cfg.tracking.client_history_rounds < 0:
+        raise ValueError(
+            f"tracking.client_history_rounds="
+            f"{cfg.tracking.client_history_rounds!r} is invalid; expected "
+            f"an int >= 0 (0 = unbounded)")
     if cfg.server.rounds < 0:
         raise ValueError(
             f"server.rounds={cfg.server.rounds!r} is invalid; expected an "

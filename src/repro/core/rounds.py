@@ -119,8 +119,9 @@ class Trainer:
                 server.model = model
         self.model = model
         self.fed_data = fed_data
-        self.tracker = tracker or Tracker(config.tracking.backend,
-                                          config.tracking.out_dir)
+        self.tracker = tracker or Tracker(
+            config.tracking.backend, config.tracking.out_dir,
+            client_history_rounds=config.tracking.client_history_rounds)
         self.server = server or Server(model, config, fed_data.test)
         self.client_cls = client_cls
         self.clients: Dict[str, Client] = {}
@@ -149,8 +150,20 @@ class Trainer:
         self._pending_residuals: Dict[str, Any] = {}
 
     # ------------------------------------------------------------------
+    # Materialized-Client cache bound: with virtual million-client
+    # populations the touched-client set grows every round, so Client
+    # objects (which pin their ClientData shard on the host) are evicted
+    # FIFO past this bound — except clients carrying sequential-path
+    # error-feedback residuals, which are state, not recomputable.
+    CLIENT_CACHE_MAX = 4096
+
     def client(self, cid: str) -> Client:
         if cid not in self.clients:
+            if len(self.clients) >= self.CLIENT_CACHE_MAX:
+                for old in [c for c, cl in self.clients.items()
+                            if cl._residual is None][
+                                : len(self.clients) - self.CLIENT_CACHE_MAX + 1]:
+                    del self.clients[old]
             ccfg = self.cfg.client
             overrides = self.het.hyperparam_overrides(cid)
             if overrides:
@@ -347,7 +360,9 @@ class Trainer:
                 st, use_kernel=self.cfg.resources.aggregation_kernel,
                 mask=mask, guard=plans is not None,
                 max_update_norm=(self.cfg.faults.max_update_norm
-                                 if plans is not None else 0.0))
+                                 if plans is not None else 0.0),
+                topology=self.cfg.resources.aggregation_topology,
+                fanout=self.cfg.resources.aggregation_fanout)
             self.server.apply_delta(delta)
             results = self.engine.per_client_results(clients, st,
                                                      include_update=False)

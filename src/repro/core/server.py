@@ -35,6 +35,11 @@ class Server:
     # ------------------------------------------------------------------
     def selection(self, client_ids: Sequence[str], round_id: int) -> List[str]:
         k = min(self.cfg.server.clients_per_round, len(client_ids))
+        if hasattr(client_ids, "sample"):
+            # lazy id spaces (virtual million-client populations) provide
+            # O(k) uniform sampling; materializing `list(client_ids)`
+            # here would be the only O(population) step in a round
+            return client_ids.sample(self.rng, k)
         return list(self.rng.choice(list(client_ids), size=k, replace=False))
 
     def compression(self, params: Any) -> Any:
@@ -52,7 +57,9 @@ class Server:
         counts = [r["num_samples"] for r in results]
         agg = get_aggregator(self.cfg.server.aggregation)
         self.params = agg(self.params, updates, counts,
-                          use_kernel=self.cfg.resources.aggregation_kernel)
+                          use_kernel=self.cfg.resources.aggregation_kernel,
+                          topology=self.cfg.resources.aggregation_topology,
+                          fanout=self.cfg.resources.aggregation_fanout)
 
     def apply_delta(self, delta: Any, server_lr: float = 1.0) -> None:
         """Apply a pre-aggregated update delta (the distributed batched

@@ -24,8 +24,11 @@ class PowerOfChoiceServer(Server):
     def selection(self, client_ids: Sequence[str], round_id: int) -> List[str]:
         C = min(self.cfg.server.clients_per_round, len(client_ids))
         d = min(self.CANDIDATE_FACTOR * C, len(client_ids))
-        candidates = list(self.rng.choice(list(client_ids), size=d,
-                                          replace=False))
+        if hasattr(client_ids, "sample"):   # lazy id space: O(d) draw
+            candidates = client_ids.sample(self.rng, d)
+        else:
+            candidates = list(self.rng.choice(list(client_ids), size=d,
+                                              replace=False))
         # rank by last observed local loss; unseen clients rank first
         # (treated as infinitely lossy -> explored early)
         candidates.sort(key=lambda c: -self._last_loss.get(c, float("inf")))

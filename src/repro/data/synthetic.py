@@ -16,8 +16,9 @@ learn them, non-IID partitions degrade accuracy, sample counts match.
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -120,6 +121,117 @@ DATASETS = {
     "synthetic": make_synthetic_linear,
     "tiny_lm": make_tiny_lm,
 }
+
+
+# ---------------------------------------------------------------------------
+# Virtual (per-client lazy) generation — million-client populations
+# ---------------------------------------------------------------------------
+#
+# A materialized RawDataset costs O(population) host memory before a single
+# round runs.  For synthetic datasets the per-client shard is a pure
+# function of ``(dataset, seed, client index)``, so a million-client
+# federation needs *zero* storage for cold clients: each client's samples
+# are regenerated bit-identically on demand (the explicit recompute path
+# behind the batched executor's tiered data pool).  Only the small shared
+# structure — class prototypes, the linear teacher, the Markov styles — is
+# computed once per ``(dataset, seed)`` and cached below.
+
+VIRTUAL_SAMPLES_DEFAULT = 32
+
+
+def _client_rng(name: str, seed: int, index: int) -> np.random.RandomState:
+    """Process-stable per-client stream (FNV-1a over the identity tuple —
+    Python's ``hash`` is process-randomized and would break recompute)."""
+    h = 2166136261
+    for ch in f"{name}|{seed}|{index}".encode():
+        h = (h ^ ch) * 16777619 % (2**31)
+    return np.random.RandomState(h)
+
+
+@functools.lru_cache(maxsize=8)
+def _virtual_shared(name: str, seed: int):
+    """Shared O(1) structure for a virtual dataset (cached per seed)."""
+    rng = np.random.RandomState(seed)
+    if name == "synthetic":
+        dim, n_classes = 64, 10
+        return {"w": rng.normal(0, 1, size=(dim, n_classes)).astype(np.float32),
+                "num_classes": n_classes}
+    if name in ("femnist", "cifar10"):
+        hw, ch, n_classes = ((28, 1, 62) if name == "femnist" else (32, 3, 10))
+        dim = hw * hw * ch
+        protos = rng.normal(0, 1.0, size=(n_classes, dim)).astype(np.float32)
+        noise = 1.2 if name == "femnist" else 1.6
+        return {"protos": protos, "noise": noise, "num_classes": n_classes}
+    if name == "tiny_lm":
+        vocab, n_styles = 64, 4
+        base = rng.dirichlet(np.ones(vocab) * 0.3, size=vocab)
+        styles = np.stack([
+            0.5 * base + 0.5 * rng.dirichlet(np.ones(vocab) * 0.1, size=vocab)
+            for _ in range(n_styles)])
+        return {"cum": np.cumsum(styles, axis=-1), "n_styles": n_styles,
+                "num_classes": vocab}
+    raise KeyError(
+        f"dataset {name!r} has no virtual generator; "
+        f"virtualizable: {sorted(VIRTUAL_DATASETS)}")
+
+
+VIRTUAL_DATASETS = frozenset({"synthetic", "femnist", "cifar10", "tiny_lm"})
+
+
+def virtual_num_classes(name: str, seed: int = 0) -> int:
+    return _virtual_shared(name, seed)["num_classes"]
+
+
+def make_client_shard(name: str, client_index: int, n_samples: int,
+                      seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Generate one virtual client's ``(x, y)`` shard.
+
+    Deterministic in ``(name, seed, client_index)`` — calling twice (or on
+    different hosts) yields bit-identical arrays, which is what lets the
+    tiered data pool *drop* cold rows instead of spilling them.  Each
+    client is its own "writer"/"document", so realistic-style feature
+    non-IID-ness is preserved at any population size."""
+    shared = _virtual_shared(name, seed)
+    n = int(n_samples) if n_samples > 0 else VIRTUAL_SAMPLES_DEFAULT
+    rng = _client_rng(name, seed, client_index)
+    if name == "synthetic":
+        w = shared["w"]
+        x = rng.normal(0, 1, size=(n, w.shape[0])).astype(np.float32)
+        y = np.argmax(x @ w + rng.normal(0, 0.5, size=(n, w.shape[1])), axis=1)
+        return x, y.astype(np.int32)
+    if name in ("femnist", "cifar10"):
+        protos = shared["protos"]
+        shift = rng.normal(0, 0.6, size=protos.shape[1]).astype(np.float32)
+        y = rng.randint(0, shared["num_classes"], size=n).astype(np.int32)
+        x = (protos[y] + shift[None, :]
+             + rng.normal(0, shared["noise"],
+                          size=(n, protos.shape[1])).astype(np.float32))
+        x = (x - x.mean()) / (x.std() + 1e-6)
+        return x.astype(np.float32), y
+    if name == "tiny_lm":
+        cum, vocab = shared["cum"], shared["num_classes"]
+        sty = int(rng.randint(shared["n_styles"]))
+        seq_len = 16
+        seqs = np.zeros((n, seq_len), dtype=np.int32)
+        c = rng.randint(0, vocab, size=n)
+        for t in range(seq_len):
+            seqs[:, t] = c
+            u = rng.rand(n, 1)
+            c = np.minimum((cum[sty, c] < u).sum(axis=1), vocab - 1)
+        return seqs, seqs.copy()
+    raise KeyError(f"dataset {name!r} has no virtual generator")
+
+
+def make_virtual_test(name: str, n_samples: int = 512,
+                      seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Held-out split for a virtual dataset: shards from reserved client
+    indices (``-1 .. -8``) never handed to training clients, so the test
+    distribution spans several writers/styles without overlapping any
+    client's stream."""
+    per = max(1, n_samples // 8)
+    xs, ys = zip(*(make_client_shard(name, -(j + 1), per, seed)
+                   for j in range(8)))
+    return np.concatenate(xs), np.concatenate(ys)
 
 
 def make_dataset(name: str, seed: int = 0, **kw) -> RawDataset:

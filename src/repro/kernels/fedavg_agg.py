@@ -27,10 +27,24 @@ before bucket padding, so the streaming kernel and the mesh-sharded psum
 path never see staleness — just a different normalized weight vector.  Both
 ``fedavg_aggregate`` and ``fedavg_aggregate_sharded`` accept an optional
 per-client ``staleness`` vector and fold it in-place.
+
+Hierarchical topology (``resources.aggregation_topology = "hierarchical"``):
+:func:`fedavg_aggregate_tree` generalizes the flat weighted sum into an
+edge→region→global reduction tree.  Clients are grouped into blocks of
+``fanout``; each block is reduced to a weighted partial sum by the *same*
+streaming tier reduction (the per-shard step of the flat path), and the
+(G, D) partials are fed to the next tier until one row remains.  Because
+every tier is linear in the weights, the tree computes the identical
+convex combination — with ``fanout >= N`` the first tier *is* the flat
+program, so the result is bit-equal; smaller fanouts only reassociate the
+fp32 summation (equal to ~1e-6).  Staleness folding, fault masking, and
+compressed stacked updates compose unchanged: they all act on the weight
+vector or the update rows before the tree sees them.
 """
 from __future__ import annotations
 
 import functools
+import math
 from typing import Optional, Tuple
 
 import jax
@@ -40,11 +54,21 @@ from jax.experimental import pallas as pl
 TILE_D = 2048
 TILE_N = 8
 
+#: traces of the jitted tree-aggregation program (contracts gate reads this
+#: through :func:`tree_trace_count` — one trace per (bucket, fanout) pair,
+#: zero retraces across rounds at fixed shapes)
+_TREE_TRACES = 0
+
+
+def tree_trace_count() -> int:
+    """Process-wide count of hierarchical-aggregation program traces."""
+    return _TREE_TRACES
+
 
 def bucket_clients(n: int, tile_n: int = TILE_N) -> int:
     """Smallest power-of-two multiple of ``tile_n`` that holds ``n`` rows."""
     b = tile_n
-    while b < n:
+    while b < n:  # flcheck: ignore[FLC202]  -- n is a static host int (shape)
         b *= 2
     return b
 
@@ -160,12 +184,103 @@ def fedavg_aggregate(updates: jnp.ndarray, weights: jnp.ndarray,
     return _aggregate_padded(updates, weights, interpret, tile_d, tile_n)
 
 
+def _tier_reduce(updates: jnp.ndarray, weights: jnp.ndarray,
+                 use_kernel: bool, interpret: bool, tile_d: int,
+                 tile_n: int) -> jnp.ndarray:
+    """One tier of the reduction tree: (G, F, D) x (G, F) -> (G, D).
+
+    Each group is reduced by the same streaming weighted sum the flat path
+    uses — either the chunked Pallas kernel (sequentially over groups via
+    ``lax.map``, so one compiled kernel instance serves every group) or the
+    einsum fallback.
+    """
+    if use_kernel:  # flcheck: ignore[FLC201]  -- static argname, resolved at trace time
+        return jax.lax.map(
+            lambda wu: _aggregate_padded(wu[1], wu[0], interpret, tile_d,
+                                         tile_n),
+            (weights, updates))
+    return jnp.einsum("gf,gfd->gd", weights, updates)
+
+
+@functools.partial(jax.jit, static_argnames=("fanout", "use_kernel",
+                                             "interpret", "tile_d", "tile_n"))
+def _tree_padded(updates: jnp.ndarray, weights: jnp.ndarray, fanout: int,
+                 use_kernel: bool, interpret: bool, tile_d: int,
+                 tile_n: int) -> jnp.ndarray:
+    """Edge→region→global reduction tree over (N, D) rows.
+
+    The edge tier folds the aggregation weights into per-group partial
+    sums; deeper tiers sum the partials (weight 1 each) until one row
+    remains.  All shapes are static, so the tier loop unrolls at trace
+    time into a fixed program.
+    """
+    global _TREE_TRACES
+    _TREE_TRACES += 1
+    u = updates.astype(jnp.float32)
+    w = weights.astype(jnp.float32)
+    group = bucket_clients(fanout, tile_n) if use_kernel else fanout
+    while u.shape[0] > 1:
+        n = u.shape[0]
+        g = -(-n // group)
+        pad = g * group - n
+        if pad:                        # zero rows + zero weights: no-op terms
+            u = jnp.pad(u, ((0, pad), (0, 0)))
+            w = jnp.pad(w, (0, pad))
+        u = _tier_reduce(u.reshape(g, group, u.shape[1]),
+                         w.reshape(g, group), use_kernel, interpret,
+                         tile_d, tile_n)
+        w = jnp.ones((g,), jnp.float32)    # partials already carry weight
+    return u[0]
+
+
+def fedavg_aggregate_tree(updates: jnp.ndarray, weights: jnp.ndarray,
+                          fanout: int = 0, interpret: bool = True,
+                          use_kernel: bool = True, tile_d: int = TILE_D,
+                          tile_n: int = TILE_N,
+                          staleness: Optional[jnp.ndarray] = None,
+                          staleness_power: float = 0.5) -> jnp.ndarray:
+    """Hierarchical (edge→region→global) weighted sum of client updates.
+
+    Args:
+        updates: (N, D) f32 — one flattened update vector per client.
+        weights: (N,) aggregation weights summing to 1.
+        fanout: children per tree node.  ``0`` picks ``ceil(sqrt(N))``
+            (two balanced tiers); ``fanout >= N`` short-circuits to the
+            flat program, making the result bit-equal to
+            :func:`fedavg_aggregate`.
+        interpret, use_kernel, tile_d, tile_n: tier implementation — the
+            streaming Pallas kernel per group (``use_kernel``) or einsum.
+        staleness, staleness_power: optional FedBuff discount, folded into
+            ``weights`` exactly as on the flat path.
+
+    Returns:
+        (D,) f32 weighted average.
+    """
+    n = int(updates.shape[0])  # flcheck: ignore[FLC102]  -- shape, not device data
+    weights = weights.astype(jnp.float32)
+    if staleness is not None:
+        weights = fold_staleness(weights, staleness, staleness_power)
+    if fanout <= 0:
+        fanout = max(2, int(math.ceil(math.sqrt(n))))
+    if fanout >= n:                    # one group == the flat program
+        if use_kernel:
+            return fedavg_aggregate(updates, weights, interpret=interpret,
+                                    tile_d=tile_d, tile_n=tile_n)
+        return jnp.einsum("n,nd->d", weights,
+                          updates.astype(jnp.float32))
+    updates, weights = pad_cohort(updates.astype(jnp.float32), weights,
+                                  tile_n if use_kernel else 1)
+    return _tree_padded(updates, weights, int(fanout), use_kernel,
+                        interpret, tile_d, tile_n)
+
+
 def fedavg_aggregate_sharded(updates: jnp.ndarray, weights: jnp.ndarray,
                              mesh, axis: str = "clients",
                              interpret: bool = True, tile_d: int = TILE_D,
                              tile_n: int = TILE_N,
                              staleness: Optional[jnp.ndarray] = None,
-                             staleness_power: float = 0.5) -> jnp.ndarray:
+                             staleness_power: float = 0.5,
+                             fanout: int = 0) -> jnp.ndarray:
     """Mesh-sharded weighted sum: per-shard partials + ``psum`` epilogue.
 
     Args:
@@ -179,6 +294,11 @@ def fedavg_aggregate_sharded(updates: jnp.ndarray, weights: jnp.ndarray,
             folded into ``weights`` (:func:`fold_staleness`) before
             sharding/padding — the async FedBuff path reuses this function
             unchanged.
+        fanout: ``> 0`` makes each shard reduce its local rows through the
+            hierarchical tree (:func:`fedavg_aggregate_tree` tiers) before
+            the cross-shard ``psum`` top tier; ``0`` keeps the flat
+            per-shard partial.  With ``fanout >= rows-per-shard`` the tree
+            collapses to the flat partial, so results stay bit-equal.
 
     Returns:
         (D,) f32 weighted average, replicated on every device.
@@ -200,22 +320,28 @@ def fedavg_aggregate_sharded(updates: jnp.ndarray, weights: jnp.ndarray,
     if staleness is not None:
         weights = fold_staleness(weights, staleness, staleness_power)
     updates, weights = pad_cohort(updates, weights, tile_n * nshards)
-    return _sharded_program(mesh, axis, interpret, tile_d, tile_n)(
-        weights, updates)
+    if fanout >= updates.shape[0] // nshards:
+        fanout = 0                     # tree collapses to the flat partial
+    return _sharded_program(mesh, axis, interpret, tile_d, tile_n,
+                            int(fanout))(weights, updates)
 
 
 @functools.lru_cache(maxsize=32)
 def _sharded_program(mesh, axis: str, interpret: bool, tile_d: int,
-                     tile_n: int):
-    """Jitted shard_map program, cached per (mesh, tiling) — an uncached
-    shard_map retraces every call (~200ms/round), defeating the
+                     tile_n: int, fanout: int = 0):
+    """Jitted shard_map program, cached per (mesh, tiling, fanout) — an
+    uncached shard_map retraces every call (~200ms/round), defeating the
     bucket-padding one-compiled-program design."""
     from jax.sharding import PartitionSpec as P
 
     from repro.models.sharding import shard_map
 
     def shard_body(w_loc, u_loc):
-        part = _aggregate_padded(u_loc, w_loc, interpret, tile_d, tile_n)
+        if fanout > 0:                 # local tree tiers, psum top tier
+            part = _tree_padded(u_loc, w_loc, fanout, True, interpret,
+                                tile_d, tile_n)
+        else:
+            part = _aggregate_padded(u_loc, w_loc, interpret, tile_d, tile_n)
         return jax.lax.psum(part, axis)
 
     return jax.jit(shard_map(shard_body, mesh,

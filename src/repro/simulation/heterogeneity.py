@@ -65,14 +65,22 @@ class SystemHeterogeneity:
                 for name in sorted(choices)}
 
     def speed_ratio(self, client_id: str) -> float:
+        """Deterministic per-client device-class speed.
+
+        Stateless by construction — the ratio is a pure function of
+        ``(client_id, cfg.seed)`` via FNV-1a, so million-client populations
+        cost O(1) memory here: nothing is cached, and cold clients never
+        allocate a row.  ``assignment`` is consulted *first* as an explicit
+        override map (tests and checkpoints may pin specific clients) but
+        computed values are never written back into it."""
         if not self.cfg.enabled:
             return 1.0
-        if client_id not in self.assignment:
-            rng = np.random.RandomState(
-                (hash(client_id) ^ self.cfg.seed) % (2**31))
-            self.assignment[client_id] = float(
-                rng.choice(self.cfg.speed_ratios))
-        return self.assignment[client_id]
+        if client_id in self.assignment:
+            return self.assignment[client_id]
+        rng = np.random.RandomState(
+            (_stable_hash(client_id) ^ (self.cfg.seed * 2654435761))
+            % (2**31))
+        return float(rng.choice(self.cfg.speed_ratios))
 
     def simulate_time(self, client_id: str, base_time: float) -> float:
         """Virtual wall-clock for one client's local round."""

@@ -40,9 +40,17 @@ class Tracker:
     """Local tracking backend + query API (also serves remote tracking)."""
 
     def __init__(self, backend: str = "memory",
-                 out_dir: str = "artifacts/tracking"):
+                 out_dir: str = "artifacts/tracking",
+                 client_history_rounds: int = 0):
         self.backend = backend
         self.out_dir = out_dir
+        # Retention bound for *client-level* rows in the memory backend:
+        # 0 keeps everything; N > 0 keeps per-client metrics only for the
+        # most recent N rounds (round-level metrics are always kept, so a
+        # million-client sweep doesn't accrete O(rounds * cohort) dicts).
+        # The JSONL backend is append-only and unaffected — history
+        # remains queryable on disk via ``load_jsonl``.
+        self.client_history_rounds = int(client_history_rounds)
         self.tasks: Dict[str, TaskMetrics] = {}
         if backend == "jsonl":
             os.makedirs(out_dir, exist_ok=True)
@@ -67,6 +75,16 @@ class Tracker:
         cm.metrics.update({k: _to_float(v) for k, v in metrics.items()})
         self._persist("client", {"task_id": task_id, "round": round_id,
                                  "client": client_id, "metrics": cm.metrics})
+        self._prune_clients(task, round_id)
+
+    def _prune_clients(self, task: TaskMetrics, round_id: int) -> None:
+        n = self.client_history_rounds
+        if n <= 0:
+            return
+        cutoff = round_id - n
+        for rid, rnd in task.rounds.items():
+            if rid <= cutoff and rnd.clients:
+                rnd.clients = {}
 
     # ---- query API (command-line tools / dashboards build on these) ----
     def get_task(self, task_id: str) -> TaskMetrics:

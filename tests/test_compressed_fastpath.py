@@ -332,7 +332,10 @@ def test_data_pool_invalidate_rereads_mutated_data():
         assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
-def test_data_pool_bounded_resets():
+def test_data_pool_bounded_lru_eviction():
+    """The device tier of the data pool is bounded: least-recently-used
+    rows are evicted (dropped — data recomputes from ``c.data``), most
+    recent survive, and a readmitted client trains identically."""
     from repro.core.batched import BatchedExecutor
     from repro.models.small import linear_model
 
@@ -343,8 +346,17 @@ def test_data_pool_bounded_resets():
     ex.DATA_POOL_MAX_CLIENTS = 3
     ex.run_cohort_stacked(clients[:3], params, round_id=0)
     assert set(ex._data_pool["rows"]) == {"c0", "c1", "c2"}
-    ex.run_cohort_stacked(clients[3:], params, round_id=0)   # would exceed
-    assert set(ex._data_pool["rows"]) == {"c3", "c4"}        # pool reset
+    ex.run_cohort_stacked(clients[3:], params, round_id=0)   # exceeds bound
+    # LRU: c0/c1 evicted, the most recent survivors stay resident
+    assert set(ex._data_pool["rows"]) == {"c2", "c3", "c4"}
+    assert ex._pool.stats["evictions"] == 2
+    # evicted client readmits via the recompute path, bit-identically
+    warm = ex.run_cohort_stacked(clients[:2], params, round_id=1)
+    cold = BatchedExecutor(model).run_cohort_stacked(clients[:2], params,
+                                                     round_id=1)
+    for a, b in zip(jax.tree_util.tree_leaves(warm["updates"]),
+                    jax.tree_util.tree_leaves(cold["updates"])):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,176 @@
+"""Fused whole-round program vs the staged batched path.
+
+Measures, per cohort size N ∈ {50, 200}:
+
+* round wall time under ``resources.round_fusion = "off"`` (staged fast
+  path: train dispatch → compress dispatch → aggregate dispatch → host
+  apply) vs ``"auto"`` (ONE jitted donated program for the whole round) —
+  compile warm-up excluded;
+* per-round executor **dispatch** and **host-sync** counts for both paths
+  (`repro.core.batched.dispatch_count` / ``host_sync_count``) — the fused
+  round must be exactly 1 and 1;
+* the fused round program's cost-model budget at each N: HLO FLOPs /
+  HBM bytes from ``launch.hlo_analysis.analyze_hlo`` over the lowered
+  program, plus the TPU-roofline bound seconds
+  (``launch.roofline.Roofline``) as a derived figure.
+
+``collect()`` feeds ``benchmarks/run.py --json``; ``scripts/check_bench.py``
+gates fused ≤ staged at N ≥ 50, the 1-dispatch/1-sync structure, and
+ratchets the per-N budget against ``scripts/roofline_baseline.json``
+(``bench_fused`` section).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Iterable
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+
+NS = (50, 200)
+
+# fixed shapes for the per-N cost-model budget (the bench model family:
+# linear(64, 10), 32-sample batches, 4 local steps over a 64-row pool)
+DIN = 64
+CLASSES = 10
+BATCH = 32
+STEPS = 4
+POOL = 64
+
+
+def _make_trainer(fusion: str, n: int):
+    from repro.core.config import Config
+    from repro.core.rounds import Trainer
+    from repro.core.server import Server
+    from repro.data.fed_data import build_federated_data
+    from repro.models.registry import get_model
+
+    cfg = Config.make({
+        "model": "linear",
+        "data": {"dataset": "synthetic", "num_clients": n, "batch_size": 32},
+        "server": {"rounds": 4, "clients_per_round": n, "test_every": 0},
+        "client": {"local_epochs": 2, "lr": 0.1},
+        "resources": {"execution": "batched", "round_fusion": fusion},
+        "tracking": {"enabled": False},
+    })
+    model = get_model(cfg.model)
+    fed = build_federated_data(cfg.data)
+    trainer = Trainer(cfg, model, fed, server=Server(model, cfg, fed.test))
+    trainer.server.params = model.init(jax.random.PRNGKey(cfg.seed))
+    return trainer
+
+
+def _round(fusion: str, n: int) -> Dict[str, float]:
+    """Min-of-3 timed rounds + per-round dispatch/host-sync counts
+    (warm-up excluded; min damps scheduler noise on shared CI runners)."""
+    from repro.core.batched import dispatch_count, host_sync_count
+
+    trainer = _make_trainer(fusion, n)
+    trainer.run_round(0)                      # warm-up (compile)
+    d0, h0 = dispatch_count(), host_sync_count()
+    times = []
+    for r in (1, 2, 3):
+        t0 = time.perf_counter()
+        trainer.run_round(r)
+        times.append(time.perf_counter() - t0)
+    return {"round_s": min(times),
+            "dispatches": (dispatch_count() - d0) / len(times),
+            "host_syncs": (host_sync_count() - h0) / len(times)}
+
+
+def _fused_budget(n: int) -> Dict[str, float]:
+    """Cost-model budget of the fused round program at cohort size N.
+
+    Lowers ``make_round_program`` for the bench model family at the
+    N-bucketed shapes and runs the call-graph cost model over the
+    optimized HLO — machine-independent numbers a CI ratchet can hold."""
+    import jax.numpy as jnp
+
+    from repro.core.aggregation import fedavg_weights
+    from repro.core.batched import (CohortVectors, bucket_pow2,
+                                    make_round_program)
+    from repro.core.config import ClientConfig
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.roofline import Roofline
+    from repro.models.small import linear_model
+    from repro.optim import hparams_from_config, sgd_traced
+
+    nb = bucket_pow2(n)
+    model = linear_model(din=DIN, classes=CLASSES)
+    _, hp0 = hparams_from_config(ClientConfig(lr=0.1))
+    hp = type(hp0)(*(np.full((nb,), getattr(hp0, f), np.float32)
+                     for f in type(hp0)._fields))
+    vec = CohortVectors(mu=np.zeros((nb,), np.float32),
+                        max_norm=np.zeros((nb,), np.float32), hp=hp)
+    opt = sgd_traced(use_momentum=True, use_nesterov=False)
+    make_round_program.cache_clear()
+    program = make_round_program(model, opt, STEPS,
+                                 use_prox=False, use_clip=False, mesh=None)
+
+    params = model.init(jax.random.PRNGKey(0))
+    w = np.zeros((nb,), np.float32)
+    w[:n] = fedavg_weights([1] * n)
+    args = (params,
+            jax.ShapeDtypeStruct((nb, POOL, DIN), jnp.float32),
+            jax.ShapeDtypeStruct((nb, POOL), jnp.int32),
+            jax.ShapeDtypeStruct((nb, STEPS, BATCH), jnp.int32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+            jax.tree_util.tree_map(jnp.asarray, vec),
+            jnp.asarray(w),
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.bool_),
+            (),
+            jax.ShapeDtypeStruct((nb,), jnp.int32))
+    cost = analyze_hlo(program.lower(*args).compile().as_text())
+    roof = Roofline(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                    collective_bytes=0.0, chips=1)
+    return {"flops": cost.flops, "hbm_bytes": cost.hbm_bytes,
+            "roofline_bound_s": roof.bound_s}
+
+
+def collect(ns: Iterable[int] = NS) -> Dict[str, Dict]:
+    out: Dict[str, Dict] = {
+        "staged_round": {}, "fused_round": {},
+        "staged_dispatches": {}, "fused_dispatches": {},
+        "staged_host_syncs": {}, "fused_host_syncs": {},
+        "fused_roofline": {},
+    }
+    for n in ns:
+        staged = _round("off", n)
+        fused = _round("auto", n)
+        key = str(n)
+        out["staged_round"][key] = staged["round_s"]
+        out["fused_round"][key] = fused["round_s"]
+        out["staged_dispatches"][key] = staged["dispatches"]
+        out["fused_dispatches"][key] = fused["dispatches"]
+        out["staged_host_syncs"][key] = staged["host_syncs"]
+        out["fused_host_syncs"][key] = fused["host_syncs"]
+        out["fused_roofline"][key] = _fused_budget(n)
+    return out
+
+
+def main() -> None:
+    data = collect()
+    rows = []
+    for n in sorted(data["staged_round"], key=int):
+        staged, fused = data["staged_round"][n], data["fused_round"][n]
+        rows.append((f"roundtime_staged_s_N{n}", staged,
+                     f"{data['staged_dispatches'][n]:.0f} dispatches, "
+                     f"{data['staged_host_syncs'][n]:.0f} host syncs"))
+        rows.append((f"roundtime_fused_s_N{n}", fused,
+                     f"{staged / fused:.1f}x faster, "
+                     f"{data['fused_dispatches'][n]:.0f} dispatch, "
+                     f"{data['fused_host_syncs'][n]:.0f} host sync"))
+        budget = data["fused_roofline"][n]
+        rows.append((f"fused_flops_N{n}", budget["flops"], "HLO cost model"))
+        rows.append((f"fused_hbm_bytes_N{n}", budget["hbm_bytes"],
+                     "HLO cost model"))
+        rows.append((f"fused_roofline_bound_s_N{n}",
+                     budget["roofline_bound_s"], "TPU v5e roofline"))
+    emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,8 @@ BENCHES = [
      "STC/int8 compression (Table V support)"),
     ("roundtime", "benchmarks.bench_batched",
      "Sequential vs batched execution + streaming aggregation"),
+    ("fused", "benchmarks.bench_fused",
+     "Fused whole-round program vs staged batched path + roofline budget"),
     ("distributed", "benchmarks.bench_distributed",
      "Mesh-sharded cohort (resources.distributed) per-shard round times"),
     ("async", "benchmarks.bench_async",
@@ -46,10 +48,11 @@ def run_json(path: str) -> None:
     and compressed in-program-vs-gathering round numbers as JSON
     (consumed by scripts/check_bench.py)."""
     from benchmarks import (bench_batched, bench_compression, bench_faults,
-                            bench_llm, bench_scalability)
+                            bench_fused, bench_llm, bench_scalability)
     data = bench_batched.collect()
     data.update(bench_compression.collect_rounds())
     data.update(bench_faults.collect())
+    data.update(bench_fused.collect())
     data.update(bench_llm.collect())
     data.update(bench_scalability.collect())
     with open(path, "w") as f:

@@ -58,6 +58,11 @@ SCALE_MEM_TOL = 1.25
 
 BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "test_baseline.json")
+# roofline baseline (scripts/roofline_baseline.json) also holds the per-N
+# fused-round budget recorded by benchmarks/bench_fused ("bench_fused")
+ROOFLINE_BASELINE_PATH = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "roofline_baseline.json")
+ROOFLINE_TOL = 0.15
 
 
 def check_docs() -> int:
@@ -159,6 +164,59 @@ def check(data: dict) -> int:
               f"[{status}]")
         if retraces != 0:
             failures += 1
+    # whole-round fusion: the single fused program must beat the staged
+    # chain of dispatches at gated cohort sizes, and must execute as
+    # exactly ONE dispatch with ONE batched host fetch per round
+    for n in sorted(data.get("fused_round", {}), key=int):
+        fused = data["fused_round"][n]
+        staged = data.get("staged_round", {}).get(n)
+        if staged is None:
+            print(f"fused N={n}: missing staged number")
+            failures += 1
+            continue
+        speedup = staged / fused if fused else float("inf")
+        gated = int(n) >= GATE_MIN_N
+        status = "ok" if fused <= staged else ("FAIL" if gated else "warn")
+        print(f"fused N={n}: staged={staged:.4f}s fused={fused:.4f}s "
+              f"({speedup:.1f}x) [{status}]")
+        if gated and fused > staged:
+            failures += 1
+        disp = data.get("fused_dispatches", {}).get(n)
+        sync = data.get("fused_host_syncs", {}).get(n)
+        if disp != 1 or sync != 1:
+            print(f"fused N={n}: {disp} dispatch(es), {sync} host sync(s) "
+                  f"per round (expected 1 and 1) [FAIL]")
+            failures += 1
+    # roofline ratchet: the fused round program's HLO cost-model budget
+    # (machine-independent FLOPs / HBM bytes per round, from
+    # benchmarks/bench_fused) must not bloat past the recorded baseline
+    fused_budget = data.get("fused_roofline", {})
+    if fused_budget:
+        baseline = {}
+        if os.path.exists(ROOFLINE_BASELINE_PATH):
+            with open(ROOFLINE_BASELINE_PATH) as f:
+                baseline = json.load(f).get("bench_fused", {})
+        for n in sorted(fused_budget, key=int):
+            got = fused_budget[n]
+            base = baseline.get(n)
+            if base is None:
+                print(f"fused roofline N={n}: no recorded budget — record "
+                      f"one in {ROOFLINE_BASELINE_PATH} under 'bench_fused' "
+                      f"[FAIL]")
+                failures += 1
+                continue
+            tol = base.get("tolerance", ROOFLINE_TOL)
+            for key in ("flops", "hbm_bytes"):
+                ok = got[key] <= base[key] * (1.0 + tol)
+                ratio = got[key] / base[key] if base[key] else float("inf")
+                status = "ok" if ok else "FAIL"
+                print(f"fused roofline N={n}: {key}={got[key]:.3e} "
+                      f"({ratio:.2f}x budget {base[key]:.3e}, "
+                      f"gate <= {1 + tol:.2f}x) [{status}]")
+                if not ok:
+                    failures += 1
+            print(f"fused roofline N={n}: bound="
+                  f"{got.get('roofline_bound_s', 0):.3e}s (TPU v5e model)")
     # compressed rounds: the in-program (no-gather) pipeline must beat the
     # gathering path (per-client Python compression) at gated cohort sizes
     for n in sorted(data.get("compressed_gathering", {}), key=int):

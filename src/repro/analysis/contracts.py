@@ -68,6 +68,13 @@ class ContractReport:
     tree_traces_first_round: int = 0
     tree_retraces: int = 0
     tree_host_transfer_ops: List[str] = field(default_factory=list)
+    fused_traces_first_round: int = 0
+    fused_retraces: int = 0
+    fused_host_transfer_ops: List[str] = field(default_factory=list)
+    fused_dispatches_per_round: int = 0
+    fused_host_syncs_per_round: int = 0
+    fused_flops: float = 0.0
+    fused_hbm_bytes: float = 0.0
     flops: float = 0.0
     hbm_bytes: float = 0.0
     baseline: Optional[Dict] = None
@@ -92,6 +99,15 @@ class ContractReport:
             f"(budget {self.trace_budget}), "
             f"retraces={self.tree_retraces}, host transfer ops: "
             f"{self.tree_host_transfer_ops or 'none'}",
+            f"contracts: fused round traces={self.fused_traces_first_round} "
+            f"(budget {self.trace_budget}), "
+            f"retraces={self.fused_retraces}, "
+            f"dispatches/round={self.fused_dispatches_per_round}, "
+            f"host syncs/round={self.fused_host_syncs_per_round}, "
+            f"host transfer ops: "
+            f"{self.fused_host_transfer_ops or 'none'}",
+            f"contracts: fused round program flops={self.fused_flops:.3e} "
+            f"hbm_bytes={self.fused_hbm_bytes:.3e}",
             f"contracts: round program flops={self.flops:.3e} "
             f"hbm_bytes={self.hbm_bytes:.3e}",
         ]
@@ -287,6 +303,94 @@ def check_contracts(baseline_path: Optional[str] = None,
             "host transfers in the hierarchical aggregation program: "
             + ", ".join(report.tree_host_transfer_ops))
 
+    # whole-round fusion (resources.round_fusion="auto"): the single
+    # program per round — train + (compression) + fault weighting + FedAvg
+    # + server apply — must trace once, never retrace at fixed shapes,
+    # contain no host transfers, and execute as exactly ONE dispatch with
+    # ONE batched device->host fetch per round at the executor level.
+    from repro.core.client import Client
+    from repro.core.config import ClientConfig
+    from repro.data.fed_data import ClientData
+
+    from repro.core.aggregation import fedavg_weights
+
+    weights = jnp.asarray(fedavg_weights([1] * N_CLIENTS))
+    fmask = jnp.ones((N_CLIENTS,), jnp.float32)
+    nanm = jnp.zeros((N_CLIENTS,), bool)
+    ef_rows = jnp.zeros((N_CLIENTS,), jnp.int32)
+    # host snapshot: the fused program donates its params argument, so
+    # every call needs a fresh device copy
+    gp_host = jax.tree_util.tree_map(np.asarray, args()[6])
+
+    def fused_args():
+        a = args()          # (stacked, x, y, idx, n_steps, vec, params)
+        gp = jax.tree_util.tree_map(jnp.asarray, gp_host)
+        return (gp, a[1], a[2], a[3], a[4], a[5], weights, fmask, nanm,
+                (), ef_rows)
+
+    batched.make_round_program.cache_clear()
+    ft0 = batched.round_trace_count()
+    fprogram = batched.make_round_program(model, opt, LOCAL_STEPS,
+                                          use_prox=False, use_clip=False,
+                                          mesh=None)
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=".*donated.*")
+        fout = fprogram(*fused_args())
+        jax.block_until_ready(fout)
+        report.fused_traces_first_round = batched.round_trace_count() - ft0
+        fout = fprogram(*fused_args())  # second round, identical shapes
+        jax.block_until_ready(fout)
+    report.fused_retraces = (batched.round_trace_count() - ft0
+                             - report.fused_traces_first_round)
+    if report.fused_traces_first_round > trace_budget:
+        report.violations.append(
+            f"retrace budget (fused round): "
+            f"{report.fused_traces_first_round} trace(s) for one "
+            f"(bucket, hetero-family) combination, budget is {trace_budget}")
+    if report.fused_retraces != 0:
+        report.violations.append(
+            f"retrace budget (fused round): {report.fused_retraces} "
+            f"retrace(s) across rounds at fixed shapes (expected 0)")
+    fhlo = fprogram.lower(*fused_args()).compile().as_text()
+    report.fused_host_transfer_ops = _host_transfer_ops(fhlo)
+    if report.fused_host_transfer_ops:
+        report.violations.append(
+            "host transfers in the fused round program: "
+            + ", ".join(report.fused_host_transfer_ops))
+
+    # executor level: a fused round is ONE dispatch + ONE batched fetch
+    ex_rng = np.random.RandomState(2)
+    ex_clients = []
+    for i in range(N_CLIENTS):
+        data = ClientData(ex_rng.randn(POOL_ROWS, DIN).astype(np.float32),
+                          ex_rng.randint(0, CLASSES, POOL_ROWS)
+                          .astype(np.int32))
+        ex_clients.append(Client(f"c{i}", model, data,
+                                 ClientConfig(lr=0.1, local_epochs=1),
+                                 batch_size=BATCH))
+    from repro.core.batched import BatchedExecutor
+    executor = BatchedExecutor(model)
+    executor.run_round_fused(ex_clients, model.init(jax.random.PRNGKey(0)),
+                             round_id=0)        # warm-up (compile round)
+    d0, h0 = batched.dispatch_count(), batched.host_sync_count()
+    executor.run_round_fused(ex_clients, model.init(jax.random.PRNGKey(1)),
+                             round_id=1)
+    report.fused_dispatches_per_round = batched.dispatch_count() - d0
+    report.fused_host_syncs_per_round = batched.host_sync_count() - h0
+    if report.fused_dispatches_per_round != 1:
+        report.violations.append(
+            f"fused round dispatch count: "
+            f"{report.fused_dispatches_per_round} (expected exactly 1)")
+    if report.fused_host_syncs_per_round != 1:
+        report.violations.append(
+            f"fused round host-sync count: "
+            f"{report.fused_host_syncs_per_round} (expected exactly 1 "
+            f"batched device->host fetch)")
+
+    fcost = analyze_hlo(fhlo)
+    report.fused_flops = fcost.flops
+    report.fused_hbm_bytes = fcost.hbm_bytes
+
     cost = analyze_hlo(hlo)
     report.flops = cost.flops
     report.hbm_bytes = cost.hbm_bytes
@@ -296,6 +400,8 @@ def check_contracts(baseline_path: Optional[str] = None,
         baseline = {
             "flops": cost.flops,
             "hbm_bytes": cost.hbm_bytes,
+            "fused_flops": fcost.flops,
+            "fused_hbm_bytes": fcost.hbm_bytes,
             "tolerance": tolerance,
             "program": {
                 "model": f"linear(din={DIN}, classes={CLASSES})",
@@ -319,7 +425,9 @@ def check_contracts(baseline_path: Optional[str] = None,
         report.baseline = json.load(f)
     tol = report.baseline.get("tolerance", tolerance)
     for key, value in (("flops", cost.flops),
-                       ("hbm_bytes", cost.hbm_bytes)):
+                       ("hbm_bytes", cost.hbm_bytes),
+                       ("fused_flops", fcost.flops),
+                       ("fused_hbm_bytes", fcost.hbm_bytes)):
         base = report.baseline.get(key, 0.0)
         if base and value > base * (1.0 + tol):
             report.violations.append(

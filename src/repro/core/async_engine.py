@@ -204,7 +204,9 @@ class AsyncEngine:
             payload = server.distribution(selected)
             state["down_bytes"] += (payload.get("payload_bytes", 0)
                                     * len(selected))
-            results, _ = trainer._run_batched(selected, payload, wave)
+            # async waves never fuse the round (the event loop owns
+            # aggregation), so aggregated=False and finish=None here
+            results, _, _ = trainer._run_batched(selected, payload, wave)
             state["wave_id"] += 1
             wall = sum(r["train_time"] for r in results)
             steps = sum(r["metrics"]["batches"] for r in results)

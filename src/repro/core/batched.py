@@ -129,6 +129,9 @@ class CohortVectors(NamedTuple):
 
 
 _trace_count = 0
+_round_traces = 0
+_dispatches = 0
+_host_syncs = 0
 
 
 def cohort_trace_count() -> int:
@@ -138,6 +141,43 @@ def cohort_trace_count() -> int:
     tests and benchmarks assert zero round-over-round recompiles at fixed
     bucket shapes by checking this counter stays flat across rounds."""
     return _trace_count
+
+
+def round_trace_count() -> int:
+    """How many times a fused *round* program (:func:`make_round_program`)
+    has been (re)traced this process — the fused-path analogue of
+    :func:`cohort_trace_count`; flat across rounds at fixed bucket shapes
+    (asserted by ``flcheck --contracts``)."""
+    return _round_traces
+
+
+def dispatch_count() -> int:
+    """Executor-level program dispatches this process.
+
+    Counts each *stage* the batched engine hands to the device — cohort
+    training, in-program compression, aggregation, server apply — not
+    individual XLA ops, so the staged count is a lower bound on real
+    dispatch traffic while the fused round is exactly 1.  Benchmarks and
+    ``flcheck --contracts`` assert the fused round's delta is 1."""
+    return _dispatches
+
+
+def host_sync_count() -> int:
+    """Device->host synchronization points (blocking fetches) this process.
+
+    Each ``block_until_ready`` / ``device_get`` the round pipeline performs
+    bumps this once; the fused round performs exactly one batched fetch."""
+    return _host_syncs
+
+
+def _note_dispatch(n: int = 1) -> None:
+    global _dispatches
+    _dispatches += n
+
+
+def _note_host_sync(n: int = 1) -> None:
+    global _host_syncs
+    _host_syncs += n
 
 
 @lru_cache(maxsize=32)
@@ -186,33 +226,12 @@ def build_client_mesh(devices: Optional[Sequence] = None):
     return Mesh(np.asarray(devices[:n]), (CLIENT_AXIS,))
 
 
-@lru_cache(maxsize=32)
-def make_cohort_program(model: FLModel, optimizer: TracedOptimizer,
-                        steps: int, use_prox: bool, use_clip: bool,
-                        mesh=None):
-    """One jitted program running ``steps`` local steps for a whole cohort.
-
-    Signature of the returned function (leading dim N_bucket everywhere
-    except ``global_params``):
-
-        (params, x, y, idx, n_steps, vec, global_params)
-            -> (updates, loss_mean, acc_mean)
-
-    ``vec`` is a :class:`CohortVectors`: the per-client FedProx ``mu``,
-    grad-clip ``max_norm`` and the optimizer hyperparameter struct, each
-    leaf an (N_bucket,) vector vmapped down to a per-client scalar.
-    ``optimizer`` is a :class:`repro.optim.TracedOptimizer` whose
-    ``init``/``update`` consume ``vec.hp`` — per-client opt-state is
-    already vmapped, so per-client hyperparameter scalars broadcast
-    exactly and heterogeneous momentum / weight decay / nesterov / betas
-    need no special casing.
-
-    ``params`` (the stacked copies of the global model) is donated.
-    With ``mesh`` (1-D, axis "clients"), every leading-client-dim argument
-    and output is given a ``NamedSharding`` over the mesh and
-    ``global_params`` is replicated, so the cohort streams through all
-    devices; N_bucket must be a multiple of the mesh size.
-    """
+def _one_client_fn(model: FLModel, optimizer: TracedOptimizer, steps: int,
+                   use_prox: bool, use_clip: bool):
+    """Single-client local-training body shared by the staged cohort
+    program (:func:`make_cohort_program`) and the fused round program
+    (:func:`make_round_program`), so both paths trace byte-identical
+    training arithmetic."""
 
     def one_client(params, x, y, idx, n_steps, vec, global_params):
         global _trace_count
@@ -267,6 +286,37 @@ def make_cohort_program(model: FLModel, optimizer: TracedOptimizer,
         denom = jnp.maximum(n_steps.astype(jnp.float32), 1.0)
         return update, loss_sum / denom, acc_sum / denom
 
+    return one_client
+
+
+@lru_cache(maxsize=32)
+def make_cohort_program(model: FLModel, optimizer: TracedOptimizer,
+                        steps: int, use_prox: bool, use_clip: bool,
+                        mesh=None):
+    """One jitted program running ``steps`` local steps for a whole cohort.
+
+    Signature of the returned function (leading dim N_bucket everywhere
+    except ``global_params``):
+
+        (params, x, y, idx, n_steps, vec, global_params)
+            -> (updates, loss_mean, acc_mean)
+
+    ``vec`` is a :class:`CohortVectors`: the per-client FedProx ``mu``,
+    grad-clip ``max_norm`` and the optimizer hyperparameter struct, each
+    leaf an (N_bucket,) vector vmapped down to a per-client scalar.
+    ``optimizer`` is a :class:`repro.optim.TracedOptimizer` whose
+    ``init``/``update`` consume ``vec.hp`` — per-client opt-state is
+    already vmapped, so per-client hyperparameter scalars broadcast
+    exactly and heterogeneous momentum / weight decay / nesterov / betas
+    need no special casing.
+
+    ``params`` (the stacked copies of the global model) is donated.
+    With ``mesh`` (1-D, axis "clients"), every leading-client-dim argument
+    and output is given a ``NamedSharding`` over the mesh and
+    ``global_params`` is replicated, so the cohort streams through all
+    devices; N_bucket must be a multiple of the mesh size.
+    """
+    one_client = _one_client_fn(model, optimizer, steps, use_prox, use_clip)
     batched = jax.vmap(one_client,
                        in_axes=(0, 0, 0, 0, 0, 0, None))
     if mesh is None:
@@ -279,6 +329,163 @@ def make_cohort_program(model: FLModel, optimizer: TracedOptimizer,
                    in_shardings=(cl, cl, cl, cl, cl, cl, rep),
                    out_shardings=(cl, cl, cl),
                    donate_argnums=(0,))
+
+
+@lru_cache(maxsize=16)
+def make_round_program(model: FLModel, optimizer: TracedOptimizer,
+                       steps: int, use_prox: bool, use_clip: bool,
+                       method: str = "none", stc_sparsity: float = 0.01,
+                       use_faults: bool = False,
+                       max_update_norm: float = 0.0, topology: str = "flat",
+                       fanout: int = 0, use_kernel: bool = False,
+                       server_lr: float = 1.0, interpret: bool = True,
+                       mesh=None):
+    """ONE jitted program for the whole round (``resources.round_fusion``).
+
+    Fuses cohort training (the shared :func:`_one_client_fn` body —
+    byte-identical arithmetic to the staged path), in-program STC / int8
+    compression with the error-feedback residual update, fault mask /
+    NaN-guard / survivor renormalization, flat-or-hierarchical streaming
+    FedAvg, and the server ``apply_delta`` into a single dispatch.
+    Signature of the returned function (N_b = bucketed cohort dim):
+
+        (global_params, x, y, idx, n_steps, vec, weights, mask, nan_mask,
+         ef_leaves, ef_rows)
+            -> (new_global_params, loss, acc, guard_ok, nnz, new_ef_leaves)
+
+    * ``weights`` — (N_b,) f32 normalized FedAvg weights (0 beyond N);
+      traced, so round-over-round cohort composition never retraces.
+    * ``mask`` / ``nan_mask`` — (N_b,) fault survival mask (f32 0/1) and
+      post-compression NaN-poisoning rows (bool); both traced and only
+      consulted when the static ``use_faults`` is True, so a fault-free
+      build stays byte-identical to the plain fused program.
+    * ``ef_leaves`` / ``ef_rows`` — the EF residual store's hot-tier
+      ``(alloc, leaf_size)`` matrices plus each client's row index
+      (``alloc`` = out-of-bounds sentinel for padded clients: gathers
+      fill 0, scatters drop), updated in-program and returned; ``()`` and
+      ignored under ``method="none"``.
+    * ``nnz`` — per-STC-leaf (N_b,) non-zero counts for wire accounting
+      (empty tuple otherwise); fetched by the caller in the round's ONE
+      batched device->host transfer together with loss/acc/guard_ok.
+
+    ``global_params`` and ``ef_leaves`` are donated (XLA reuses the param
+    buffer for ``params + server_lr * delta`` and the residual matrices
+    in place; CPU declines donation, and callers must not reuse the old
+    references afterwards).  With ``mesh``, client-dim arguments shard
+    over the client axis, params replicate, and aggregation runs the
+    per-shard partial-sum + ``psum`` kernel — all inside the same
+    program.
+    """
+    one_client = _one_client_fn(model, optimizer, steps, use_prox, use_clip)
+    batched = jax.vmap(one_client, in_axes=(0, 0, 0, 0, 0, 0, None))
+    tree = topology == "hierarchical"
+
+    def round_fn(global_params, x, y, idx, n_steps, vec, weights, mask,
+                 nan_mask, ef_leaves, ef_rows):
+        global _round_traces
+        _round_traces += 1           # executes once per jit trace/compile
+        from repro.core.compression import DENSE_MIN_ELEMS
+        from repro.kernels import ops as kops
+        from repro.kernels.fedavg_agg import (fedavg_aggregate_sharded,
+                                              fedavg_aggregate_tree)
+
+        nb = x.shape[0]
+        stacked = jax.tree_util.tree_map(
+            lambda p: jnp.broadcast_to(p[None], (nb,) + p.shape),
+            global_params)
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            stacked = jax.lax.with_sharding_constraint(
+                stacked, NamedSharding(mesh, P(CLIENT_AXIS)))
+        updates, loss, acc = batched(stacked, x, y, idx, n_steps, vec,
+                                     global_params)
+
+        leaves, treedef = jax.tree_util.tree_flatten(updates)
+        flat_leaves, nnz_list, new_ef = [], [], []
+        for li, leaf in enumerate(leaves):
+            size = int(np.prod(leaf.shape[1:], dtype=np.int64))
+            flat = leaf.reshape(nb, size).astype(jnp.float32)
+            if method != "none":
+                # error-correct by the stored residual; padded clients
+                # (row sentinel = alloc) gather 0 / scatter nowhere, so
+                # semantics match the staged compress_stacked exactly
+                res = jnp.take(ef_leaves[li], ef_rows, axis=0,
+                               mode="fill", fill_value=0.0)
+                corrected = flat + res
+                if size < DENSE_MIN_ELEMS:   # tiny tensors stay dense
+                    sent = corrected
+                elif method == "stc":
+                    sent, nnz = kops.stc_compress_batched(
+                        corrected, stc_sparsity, interpret=interpret,
+                        mesh=mesh)
+                    nnz_list.append(nnz)
+                else:
+                    sent, _ = kops.int8_roundtrip_batched(
+                        corrected, interpret=interpret, mesh=mesh)
+                new_ef.append(ef_leaves[li].at[ef_rows].set(
+                    corrected - sent, mode="drop"))
+                flat = sent
+            flat_leaves.append(flat)
+        flat = (flat_leaves[0] if len(flat_leaves) == 1
+                else jnp.concatenate(flat_leaves, axis=1))
+
+        if use_faults:
+            # identical op order to aggregate_stacked's fault branch:
+            # poison AFTER compression, guard on the sent values, zero
+            # rejected rows in the data, renormalize the survivors
+            flat = jnp.where(nan_mask[:, None], jnp.float32(jnp.nan), flat)
+            wj = weights * mask
+            ok = jnp.isfinite(flat).all(axis=1)
+            if max_update_norm > 0:
+                norms = jnp.sqrt(jnp.sum(
+                    jnp.square(flat.astype(jnp.float32)), axis=1))
+                ok = ok & (norms <= max_update_norm)
+            wj = wj * ok.astype(jnp.float32)
+            flat = jnp.where(ok[:, None], flat, 0.0)
+            wsum = jnp.sum(wj)
+            w = jnp.where(wsum > 0, wj / wsum, 0.0)
+        else:
+            ok = jnp.ones((nb,), bool)
+            w = weights
+
+        if mesh is not None:
+            delta = fedavg_aggregate_sharded(
+                flat, w, mesh, interpret=interpret,
+                fanout=(fanout or int(np.ceil(np.sqrt(nb)))) if tree else 0)
+        elif tree:
+            delta = fedavg_aggregate_tree(
+                flat, w, fanout=fanout, use_kernel=use_kernel,
+                interpret=interpret if use_kernel else True)
+        elif use_kernel:
+            delta = kops.fedavg_aggregate(flat, w, interpret=interpret)
+        else:
+            delta = jnp.einsum("n,nd->d", w, flat.astype(jnp.float32))
+
+        out, off = [], 0
+        for leaf in leaves:
+            size = int(np.prod(leaf.shape[1:], dtype=np.int64))
+            out.append(delta[off: off + size].reshape(leaf.shape[1:]))
+            off += size
+        delta_tree = jax.tree_util.tree_unflatten(treedef, out)
+        # the server apply (aggregation.apply_delta), in-program
+        new_global = jax.tree_util.tree_map(
+            lambda p, d: (p.astype(jnp.float32)
+                          + server_lr * d).astype(p.dtype),
+            global_params, delta_tree)
+        return (new_global, loss, acc, ok, tuple(nnz_list), tuple(new_ef))
+
+    if mesh is None:
+        return jax.jit(round_fn, donate_argnums=(0, 9))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cl = NamedSharding(mesh, P(CLIENT_AXIS))
+    rep = NamedSharding(mesh, P())
+    ef = NamedSharding(mesh, P(CLIENT_AXIS, None))
+    return jax.jit(round_fn,
+                   in_shardings=(rep, cl, cl, cl, cl, cl, rep, rep, rep,
+                                 ef, rep),
+                   out_shardings=(rep, cl, cl, cl, cl, ef),
+                   donate_argnums=(0, 9))
 
 
 class BatchedExecutor:
@@ -528,17 +735,10 @@ class BatchedExecutor:
         return CohortVectors(mu=mu, max_norm=max_norm, hp=hp), opt
 
     # ------------------------------------------------------------------
-    def run_cohort_stacked(self, clients: Sequence, global_params: PyTree,
-                           round_id: int) -> Dict[str, Any]:
-        """Train the cohort and return the *stacked* results.
-
-        Returns a dict with ``updates`` (pytree, leading dim N_bucket —
-        device-sharded over the client mesh when distributed), ``loss`` /
-        ``acc`` (np arrays, (N_bucket,)), ``n_steps`` (np, (N_bucket,)),
-        ``num_samples`` (np, (N,)), and ``wall`` (float seconds).  The
-        distributed aggregation fast path consumes this directly so client
-        updates never gather onto one device.
-        """
+    def _cohort_inputs(self, clients: Sequence, round_id: int):
+        """Host-side round prep shared by the staged and fused paths:
+        bucketed shapes, cohort vectors + traced optimizer, pooled device
+        data, batch indices and per-client step counts."""
         batch_sizes = {c._batch_size() for c in clients}
         if len(batch_sizes) != 1:
             raise ValueError(
@@ -561,6 +761,22 @@ class BatchedExecutor:
         for i, c in enumerate(clients):
             idx[i, : len(idx_list[i])] = idx_list[i]
             n_steps[i] = len(idx_list[i])
+        return Nb, S, vec, optimizer, xd, yd, idx, n_steps
+
+    # ------------------------------------------------------------------
+    def run_cohort_stacked(self, clients: Sequence, global_params: PyTree,
+                           round_id: int) -> Dict[str, Any]:
+        """Train the cohort and return the *stacked* results.
+
+        Returns a dict with ``updates`` (pytree, leading dim N_bucket —
+        device-sharded over the client mesh when distributed), ``loss`` /
+        ``acc`` (np arrays, (N_bucket,)), ``n_steps`` (np, (N_bucket,)),
+        ``num_samples`` (np, (N,)), and ``wall`` (float seconds).  The
+        distributed aggregation fast path consumes this directly so client
+        updates never gather onto one device.
+        """
+        Nb, S, vec, optimizer, xd, yd, idx, n_steps = self._cohort_inputs(
+            clients, round_id)
 
         program = make_cohort_program(
             self.model, optimizer, S,
@@ -584,9 +800,11 @@ class BatchedExecutor:
                 stacked, xd, yd, jnp.asarray(idx),
                 jnp.asarray(n_steps),
                 jax.tree_util.tree_map(jnp.asarray, vec), global_params)
+        _note_dispatch()
         # the round's timing boundary: ``wall`` feeds the virtual clock, so
         # the program must actually have finished here
         jax.block_until_ready(updates)  # flcheck: ignore[FLC101]  -- intended timing boundary
+        _note_host_sync()
         wall = time.perf_counter() - t0
 
         return {
@@ -598,6 +816,133 @@ class BatchedExecutor:
                                       dtype=np.int64),
             "wall": wall,
         }
+
+    # ------------------------------------------------------------------
+    def run_round_fused(self, clients: Sequence, global_params: PyTree,
+                        round_id: int, *, method: str = "none",
+                        stc_sparsity: float = 0.01,
+                        use_kernel: bool = False, topology: str = "flat",
+                        fanout: int = 0, use_faults: bool = False,
+                        mask: Optional[np.ndarray] = None,
+                        nan_rows: Sequence[int] = (),
+                        max_update_norm: float = 0.0, server_lr: float = 1.0,
+                        interpret: Optional[bool] = None, sync: bool = True):
+        """Run the whole round as ONE dispatch (:func:`make_round_program`).
+
+        Returns ``(st, new_global_params, fetch)``: ``st`` is the stacked
+        result dict (no ``updates`` — they are consumed in-program), and
+        the round's single batched device->host transfer pulls loss / acc
+        / guard_ok / per-leaf STC nnz together.  With ``sync=True`` the
+        fetch has happened (``st`` holds host np arrays, ``fetch`` is
+        ``None``, and ``wall`` is the blocking round time — the virtual
+        clock's boundary).  With ``sync=False`` (``tracking.round_sync``)
+        dispatch returns immediately: ``wall`` is submission time, ``st``
+        holds device arrays and the caller runs ``fetch()`` later —
+        typically after dispatching round R+1, overlapping the transfer
+        with compute.  The EF residual store is updated in-program
+        (state/checkpoint format unchanged); its hot-tier matrices and
+        ``global_params`` are donated, so callers must drop old references
+        to the incoming server params.
+        """
+        Nb, S, vec, optimizer, xd, yd, idx, n_steps = self._cohort_inputs(
+            clients, round_id)
+        from repro.core.aggregation import fedavg_weights
+        from repro.kernels import ops as kops
+
+        N = len(clients)
+        num_samples = np.asarray([len(c.data) for c in clients],
+                                 dtype=np.int64)
+        w = np.zeros((Nb,), np.float32)
+        w[:N] = fedavg_weights(num_samples)
+        m = np.zeros((Nb,), np.float32)
+        m[:N] = 1.0 if mask is None else np.asarray(mask, np.float32)
+        nanm = np.zeros((Nb,), bool)
+        if len(nan_rows):
+            nanm[np.asarray(nan_rows, np.int64)] = True
+
+        sizes = [int(np.prod(l.shape, dtype=np.int64))
+                 for l in jax.tree_util.tree_leaves(global_params)]
+        if method != "none":
+            from repro.core.tiered_store import TieredRowStore
+
+            if self._ef is None:
+                self._ef = TieredRowStore(self.EF_MAX_CLIENTS, spill="host",
+                                          mesh=self.mesh, name="ef-store")
+            if self._ef.leaves and \
+                    [l.shape[1] for l in self._ef.leaves] != sizes:
+                raise ValueError(
+                    "error-feedback store leaf sizes "
+                    f"{[l.shape[1] for l in self._ef.leaves]} do not match "
+                    f"the update structure {sizes}; one executor serves one "
+                    f"model")
+            rows = self._ef.ensure(
+                [c.client_id for c in clients],
+                lambda cid: [np.zeros((s,), np.float32) for s in sizes])
+            ef_leaves = tuple(self._ef.leaves)
+            # out-of-bounds sentinel: padded clients gather 0 residual
+            # (mode="fill") and their scatter rows are dropped
+            ef_rows = np.full((Nb,), self._ef.alloc, np.int32)
+            ef_rows[:N] = rows
+        else:
+            ef_leaves, ef_rows = (), np.zeros((Nb,), np.int32)
+
+        program = make_round_program(
+            self.model, optimizer, S,
+            use_prox=bool((vec.mu > 0).any()),
+            use_clip=bool((vec.max_norm > 0).any()),
+            method=method, stc_sparsity=float(stc_sparsity),
+            use_faults=use_faults, max_update_norm=float(max_update_norm),
+            topology=topology, fanout=int(fanout), use_kernel=use_kernel,
+            server_lr=float(server_lr),
+            interpret=kops.get_interpret(interpret), mesh=self.mesh)
+
+        t0 = time.perf_counter()
+        with warnings.catch_warnings():
+            # CPU backends may decline the donation; that is fine.
+            warnings.filterwarnings("ignore", message=".*donated.*")
+            new_global, loss, acc, ok, nnz, new_ef = program(
+                global_params, xd, yd, jnp.asarray(idx),
+                jnp.asarray(n_steps),
+                jax.tree_util.tree_map(jnp.asarray, vec),
+                jnp.asarray(w), jnp.asarray(m), jnp.asarray(nanm),
+                ef_leaves, jnp.asarray(ef_rows))
+        _note_dispatch()
+        if method != "none":
+            self._ef.leaves = list(new_ef)
+
+        st: Dict[str, Any] = {
+            "n_steps": n_steps,
+            "num_samples": num_samples,
+            "compression": method,
+            "comp_sizes": sizes,
+        }
+        # reconstruct the per-leaf nnz layout per_client_payload_bytes
+        # expects: one entry per leaf, None for non-STC leaves
+        from repro.core.compression import DENSE_MIN_ELEMS
+
+        def nnz_layout(per_stc_leaf):
+            it = iter(per_stc_leaf)
+            return [next(it) if method == "stc" and s >= DENSE_MIN_ELEMS
+                    else None for s in sizes]
+
+        def fetch():
+            # the round's ONE batched device->host transfer
+            l_h, a_h, ok_h, nnz_h = jax.device_get((loss, acc, ok, nnz))  # flcheck: ignore[FLC101]  -- the fused round's single batched fetch
+            _note_host_sync()
+            st["loss"], st["acc"] = np.asarray(l_h), np.asarray(a_h)
+            if use_faults:
+                st["guard_ok"] = np.asarray(ok_h)
+            st["nnz"] = nnz_layout([np.asarray(a) for a in nnz_h])
+            st.pop("_fetch", None)
+
+        if sync:
+            fetch()
+            # timing boundary: the fetch above blocked on the whole round
+            st["wall"] = time.perf_counter() - t0
+            return st, new_global, None
+        st["wall"] = time.perf_counter() - t0   # submission time
+        st["_fetch"] = fetch
+        return st, new_global, fetch
 
     # ------------------------------------------------------------------
     def run_cohort(self, clients: Sequence, global_params: PyTree,
@@ -755,6 +1100,7 @@ class BatchedExecutor:
             sent_leaves.append(sent.reshape(leaf.shape))
             nnz_list.append(nnz)
         self._ef.scatter(ids, new_res)
+        _note_dispatch()               # the staged compression stage
         out = dict(st)
         out["updates"] = jax.tree_util.tree_unflatten(treedef, sent_leaves)
         out["nnz"] = nnz_list
@@ -787,6 +1133,8 @@ class BatchedExecutor:
         if stc_nnz:
             # the documented single transfer of the compressed round: all
             # per-leaf nnz counts fetched at once for wire accounting
+            if any(not isinstance(a, np.ndarray) for a in stc_nnz):
+                _note_host_sync()      # fused rounds pass pre-fetched np
             for counts in jax.device_get(stc_nnz):  # flcheck: ignore[FLC101]  -- one batched nnz fetch
                 counts = counts[:n].astype(np.int64)
                 # vectorized compression.stc_leaf_bytes
@@ -886,6 +1234,7 @@ class BatchedExecutor:
         else:
             delta = jnp.einsum("n,nd->d", jnp.asarray(w),
                                flat.astype(jnp.float32))
+        _note_dispatch()               # the staged aggregation stage
         # unravel by leaf shape (slices are views; no copy of the model)
         out, off = [], 0
         for leaf in leaves:

@@ -130,6 +130,11 @@ class ServerConfig:
     test_every: int = 1
     # Compression stage (server->client direction); "none" | "stc" | "int8"
     compression: str = "none"
+    # Server learning rate applied to the aggregated delta:
+    # new_params = params + server_lr * delta.  Flows through every engine
+    # (sequential aggregation, staged/fused batched apply, async buffer
+    # apply) so the engines stay numerically interchangeable.
+    server_lr: float = 1.0
     track: bool = True
 
 
@@ -485,6 +490,15 @@ class ResourceConfig:
     # as failed dispatches (async); the round's virtual makespan is capped
     # at the deadline.  See docs/faults.md.
     round_deadline: float = 0.0
+    # Whole-round program fusion on the batched fast path: "auto" fuses
+    # train + in-program compression (with EF residual update) + fault
+    # mask/guard + FedAvg + server apply into ONE jitted, donated program
+    # per round (single dispatch, one batched host fetch) whenever the
+    # round is fast-path eligible, the server's apply_delta is not
+    # overridden and round_deadline == 0; ineligible rounds fall back to
+    # the staged fast path with a one-time warning naming the reason.
+    # "off" forces the staged path.  See docs/perf.md.
+    round_fusion: str = "auto"        # auto | off
 
 
 def validate_resource_config(cfg: "ResourceConfig") -> None:
@@ -530,6 +544,10 @@ def validate_resource_config(cfg: "ResourceConfig") -> None:
         raise ValueError(
             f"resources.aggregation_fanout must be 0 (auto, ~sqrt(N)) or "
             f">= 2, got {cfg.aggregation_fanout}")
+    if cfg.round_fusion not in ("auto", "off"):
+        raise ValueError(
+            f"unknown round_fusion {cfg.round_fusion!r}; "
+            f"expected 'auto' or 'off'")
 
 
 @dataclass(frozen=True)
@@ -542,6 +560,15 @@ class TrackingConfig:
     # retained).  0 = unbounded — fine for small federations; set a bound
     # for million-client populations so tracking stays O(cohort).
     client_history_rounds: int = 0
+    # Per-round timing boundary.  True (default) blocks on the round's
+    # device work before stamping wall time, so the virtual clock and
+    # per-round wall metrics are exact.  False skips the block on fused
+    # rounds and defers the metric fetch one round, overlapping round R's
+    # device->host fetch with round R+1's dispatch; wall_time then measures
+    # submission, not execution, and scheduler speed profiles lag one
+    # round.  Rejected when the fault layer or round_deadline is active
+    # (both need the exact clock).  See docs/perf.md.
+    round_sync: bool = True
 
 
 @dataclass(frozen=True)
@@ -616,6 +643,21 @@ def validate_config(cfg: "Config") -> None:
             f"is invalid; expected an int >= 1")
     if not cfg.tracking.out_dir:
         raise ValueError("tracking.out_dir must be a non-empty path")
+    if not isinstance(cfg.tracking.round_sync, bool):
+        raise ValueError(
+            f"tracking.round_sync={cfg.tracking.round_sync!r} is invalid; "
+            f"expected a bool")
+    if not _finite(cfg.server.server_lr) or float(cfg.server.server_lr) <= 0:
+        raise ValueError(
+            f"server.server_lr={cfg.server.server_lr!r} is invalid; "
+            f"expected a finite float > 0")
+    if not cfg.tracking.round_sync and (
+            cfg.faults.active or cfg.resources.round_deadline > 0):
+        raise ValueError(
+            "tracking.round_sync=False defers the per-round metric fetch "
+            "and cannot be combined with fault injection or "
+            "resources.round_deadline — both need the exact virtual clock "
+            "(see docs/perf.md)")
     validate_optimizer_hparams(cfg.client)
     validate_finetune_config(cfg.client)
     validate_hyperparam_choices(cfg.system_heterogeneity.hyperparam_choices)

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional
 
 import numpy as np
@@ -63,6 +64,16 @@ def _poison_update(update):
 
     return jax.tree_util.tree_map(
         one, update, is_leaf=lambda x: isinstance(x, comp.CompressedTensor))
+
+
+def dense_update_bytes(params) -> int:
+    """Wire size of one dense (uncompressed) update of ``params``' shape.
+
+    Per-leaf ``dtype.itemsize`` — NOT a hardcoded 4 bytes/element — so
+    bf16/f16/mixed-dtype trees and LoRA adapter trees report what would
+    actually cross the wire."""
+    return sum(int(np.prod(l.shape)) * np.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(params))
 
 
 def update_is_valid(update, max_norm: float = 0.0) -> bool:
@@ -148,6 +159,9 @@ class Trainer:
         # error-feedback residuals loaded from a checkpoint, applied
         # lazily when the owning client is materialized
         self._pending_residuals: Dict[str, Any] = {}
+        # one loud warning per trainer when resources.round_fusion="auto"
+        # cannot fuse a synchronous batched round (docs/perf.md)
+        self._fusion_warned = False
 
     # ------------------------------------------------------------------
     # Materialized-Client cache bound: with virtual million-client
@@ -261,7 +275,17 @@ class Trainer:
         ``train`` overrides cannot be vectorized and raise instead of
         silently diverging.
 
-        Returns ``(results, aggregated)``.  With default post-train stages
+        Returns ``(results, aggregated, finish)``; ``finish`` is ``None``
+        except on deferred fused rounds (``tracking.round_sync=False``),
+        where the caller invokes it later to run the round's single
+        batched metric fetch and fill in ``metrics`` / ``payload_bytes``.
+        With ``resources.round_fusion="auto"`` (default), an eligible
+        synchronous round additionally fuses compression, fault
+        weighting, aggregation AND the server apply into ONE dispatch
+        (``BatchedExecutor.run_round_fused``); ineligible rounds warn
+        once and fall back to the staged fast path below.
+
+        With default post-train stages
         and plain FedAvg, synchronous batched rounds take the **no-gather
         fast path**: the stacked updates are — for the built-in
         ``client.compression = "stc"/"int8"`` — compressed *inside* the
@@ -316,6 +340,114 @@ class Trainer:
             and method in ("none", "stc", "int8")
             and self.cfg.server.aggregation == "fedavg"
             and type(self.server).aggregation is Server.aggregation)
+        # Whole-round fusion (resources.round_fusion="auto"): the fast
+        # path's remaining eligibility is an un-overridden apply_delta
+        # (the apply runs in-program) and no round_deadline (deadline
+        # masking needs the round's own measured wall time, which does not
+        # exist until the single dispatch completes).
+        fuse_round = (
+            fuse_agg
+            and self.cfg.resources.round_fusion == "auto"
+            and self.cfg.resources.round_deadline == 0
+            and type(self.server).apply_delta is Server.apply_delta)
+        if not is_async and not fuse_round \
+                and self.cfg.resources.round_fusion == "auto" \
+                and not self._fusion_warned:
+            reasons = []
+            if not default_post:
+                reasons.append("per-client compression/encryption/upload "
+                               "stage overrides")
+            if method not in ("none", "stc", "int8"):
+                reasons.append(f"client.compression={method!r}")
+            if self.cfg.server.aggregation != "fedavg":
+                reasons.append(f"server.aggregation="
+                               f"{self.cfg.server.aggregation!r} (non-FedAvg)")
+            if type(self.server).aggregation is not Server.aggregation:
+                reasons.append("a Server.aggregation override")
+            if type(self.server).apply_delta is not Server.apply_delta:
+                reasons.append("a Server.apply_delta override")
+            if self.cfg.resources.round_deadline > 0:
+                reasons.append("resources.round_deadline > 0 (deadline "
+                               "masking needs the measured round time)")
+            self._fusion_warned = True
+            warnings.warn(
+                "resources.round_fusion='auto' cannot fuse this round into "
+                "one program (" + "; ".join(reasons) + "); falling back to "
+                "the staged batched path — set round_fusion='off' to "
+                "silence (docs/perf.md)", stacklevel=3)
+        if fuse_round:
+            # ---- the fused fast path: ONE dispatch for the whole round
+            # (train + compress/EF + fault mask/guard + FedAvg + apply),
+            # one batched device->host fetch for metrics/accounting ----
+            labels: Dict[str, str] = {}
+            mask = None
+            nan_rows: List[int] = []
+            if plans is not None:
+                # dropout/crash are known before the round runs, so the
+                # survival mask is an input of the single dispatch (the
+                # on-device guard still catches NaN/norm outliers)
+                mask = np.ones((len(clients),), np.float32)
+                for i, client in enumerate(clients):
+                    p = plans[client.client_id]
+                    if p.dropout:
+                        mask[i], labels[client.client_id] = 0.0, "dropped"
+                    elif p.crash:
+                        mask[i], labels[client.client_id] = 0.0, "crashed"
+                nan_rows = [i for i, c in enumerate(clients)
+                            if plans[c.client_id].nan_update]
+            st, new_params, fetch = self.engine.run_round_fused(
+                clients, global_params, round_id,
+                method=method, stc_sparsity=self.cfg.client.stc_sparsity,
+                use_kernel=self.cfg.resources.aggregation_kernel,
+                topology=self.cfg.resources.aggregation_topology,
+                fanout=self.cfg.resources.aggregation_fanout,
+                use_faults=plans is not None, mask=mask, nan_rows=nan_rows,
+                max_update_norm=(self.cfg.faults.max_update_norm
+                                 if plans is not None else 0.0),
+                server_lr=self.cfg.server.server_lr,
+                sync=self.cfg.tracking.round_sync)
+            self.server.params = new_params
+
+            total_steps = max(int(st["n_steps"][: len(clients)].sum()), 1)
+            steps_f = st["n_steps"].astype(np.float64).tolist()
+            results = [
+                {"client_id": c.client_id, "num_samples": len(c.data),
+                 "train_time": st["wall"] * steps_f[i] / total_steps}
+                for i, c in enumerate(clients)]
+
+            def complete():
+                """Metric/accounting assembly from the round's single
+                batched fetch (already host-resident in ``st``)."""
+                loss, acc = st["loss"].tolist(), st["acc"].tolist()
+                for i, res in enumerate(results):
+                    res["metrics"] = {"loss": loss[i], "accuracy": acc[i],
+                                      "batches": steps_f[i]}
+                if method != "none":
+                    payloads = self.engine.per_client_payload_bytes(st)
+                else:
+                    # dense update wire size from each leaf's real dtype
+                    payloads = ([dense_update_bytes(global_params)]
+                                * len(clients))
+                for res, pb in zip(results, payloads):
+                    res["payload_bytes"] = pb
+                if plans is not None:
+                    ok = st["guard_ok"]
+                    for i, res in enumerate(results):
+                        lab = labels.get(res["client_id"])
+                        if lab is None and not ok[i]:
+                            lab = "rejected"
+                            counts["rejected"] += 1
+                        if lab is not None:
+                            res["_fault"] = lab
+
+            if fetch is None:
+                complete()
+                return results, True, None
+
+            def finish():
+                fetch()
+                complete()
+            return results, True, finish
         if fuse_agg:
             st = self.engine.run_cohort_stacked(clients, global_params,
                                                 round_id)
@@ -369,11 +501,9 @@ class Trainer:
             if method != "none":
                 payloads = self.engine.per_client_payload_bytes(st)
             else:
-                # dense f32 update wire size, identical across the cohort
-                upd_bytes = sum(
-                    int(np.prod(l.shape)) * 4
-                    for l in jax.tree_util.tree_leaves(global_params))
-                payloads = [upd_bytes] * len(clients)
+                # dense update wire size, identical across the cohort
+                payloads = ([dense_update_bytes(global_params)]
+                            * len(clients))
             for client, res, pb in zip(clients, results, payloads):
                 res["client_id"] = client.client_id
                 res["payload_bytes"] = pb
@@ -388,7 +518,7 @@ class Trainer:
                         counts["rejected"] += 1
                     if lab is not None:
                         res["_fault"] = lab
-            return results, True
+            return results, True, None
 
         if inprogram:
             # async wave: compress in-program, hand back per-client sent
@@ -402,7 +532,7 @@ class Trainer:
             for client, res, pb in zip(clients, results, payloads):
                 res["client_id"] = client.client_id
                 res["payload_bytes"] = pb
-            return results, False
+            return results, False, None
 
         raw = self.engine.run_cohort(clients, global_params, round_id)
         results = []
@@ -425,10 +555,21 @@ class Trainer:
             if p is not None and p.nan_update:
                 res["update"] = _poison_update(res["update"])
             results.append(res)
-        return results, False
+        return results, False, None
 
     # ------------------------------------------------------------------
     def run_round(self, round_id: int) -> Dict[str, float]:  # flcheck: hot
+        """Dispatch round ``round_id`` and finalize its metrics.
+
+        The round is internally split into a dispatch phase and a
+        finalize phase (:meth:`_dispatch_round`) so the ``_run`` loop can
+        — under ``tracking.round_sync=False`` — overlap round R's metric
+        fetch with round R+1's dispatch; calling this method runs both
+        back to back (the default, exact-clock behavior)."""
+        return self._dispatch_round(round_id)()
+
+    def _dispatch_round(self, round_id: int  # flcheck: hot
+                        ) -> Callable[[], Dict[str, float]]:
         if self.cfg.resources.execution == "async":
             raise ValueError(
                 'resources.execution="async" replaces the synchronous round '
@@ -453,14 +594,12 @@ class Trainer:
         groups = self._allocate(selected, round_id)
 
         results, sim_times, wall_times = [], {}, {}
-        aggregated = False
+        aggregated, finish = False, None
         t_wall0 = time.perf_counter()
         down_bytes = payload.get("payload_bytes", 0) * len(selected)
-        up_bytes = 0
         if self.engine is not None:
-            results, aggregated = self._run_batched(selected, payload,
-                                                    round_id, plans=plans,
-                                                    counts=counts)
+            results, aggregated, finish = self._run_batched(
+                selected, payload, round_id, plans=plans, counts=counts)
             for res in results:
                 cid = res["client_id"]
                 wall_times[cid] = res["train_time"]
@@ -515,19 +654,6 @@ class Trainer:
                     res["_fault"] = "rejected"
                     counts["rejected"] += 1
         survivors = [r for r in results if r.get("_fault") is None]
-        # one batched host sync for the whole cohort's wire accounting
-        # (compression.payload_bytes_many), instead of per-leaf blocking
-        # reads per client; crashed/dropped/deadline-missed uploads never
-        # reached the server, so their bytes do not count
-        arrived = (results if plans is None else
-                   [r for r in results
-                    if r.get("_fault") in (None, "rejected")])
-        up_bytes += sum(r["payload_bytes"] for r in arrived
-                        if "payload_bytes" in r)
-        missing = [r for r in arrived if "payload_bytes" not in r]
-        if missing:
-            up_bytes += sum(comp.payload_bytes_many(
-                [r["update"] for r in missing]))
 
         # Eq. 1 makespan under the virtual clock (the server stops
         # waiting at the deadline, so per-client contributions cap there)
@@ -544,39 +670,68 @@ class Trainer:
         if not aggregated and (plans is None or survivors):
             server.aggregation(survivors if plans is not None else results)
         wall = time.perf_counter() - t_wall0
+        # the params this round produced: a deferred finalize must
+        # evaluate these even after round R+1 has replaced server.params
+        params_r = server.params
 
-        train_loss = weighted_train_loss(
-            survivors if plans is not None else results) \
-            if plans is None or survivors else float("nan")
-        metrics = {
-            "round_time": round_virtual,
-            "wall_time": wall,
-            "clients": len(selected),
-            "comm_down_bytes": down_bytes,
-            "comm_up_bytes": up_bytes,
-            "train_loss": train_loss,
-        }
-        if plans is not None:
-            metrics.update(
-                survivors=len(survivors),
-                survivor_fraction=len(survivors) / max(len(selected), 1),
-                **counts)
-        if self.cfg.server.test_every and \
-           (round_id + 1) % self.cfg.server.test_every == 0:
-            metrics.update(server.test())
+        def finalize() -> Dict[str, float]:
+            if finish is not None:
+                finish()   # the deferred fused round's single batched fetch
+            survivors = [r for r in results if r.get("_fault") is None]
+            # one batched host sync for the whole cohort's wire accounting
+            # (compression.payload_bytes_many), instead of per-leaf
+            # blocking reads per client; crashed/dropped/deadline-missed
+            # uploads never reached the server, so their bytes don't count
+            arrived = (results if plans is None else
+                       [r for r in results
+                        if r.get("_fault") in (None, "rejected")])
+            up_bytes = sum(r["payload_bytes"] for r in arrived
+                           if "payload_bytes" in r)
+            missing = [r for r in arrived if "payload_bytes" not in r]
+            if missing:
+                up_bytes += sum(comp.payload_bytes_many(
+                    [r["update"] for r in missing]))
 
-        if self.cfg.tracking.enabled:
-            self.tracker.track_round(self.cfg.task_id, round_id, **metrics)
-            for r in results:
-                extra = ({} if r.get("_fault") is None
-                         else {"fault": r["_fault"]})
-                self.tracker.track_client(
-                    self.cfg.task_id, round_id, r["client_id"],
-                    train_time=wall_times[r["client_id"]],
-                    simulated_time=sim_times[r["client_id"]],
-                    **r["metrics"], **extra)
-        self.history.append(metrics)
-        return metrics
+            train_loss = weighted_train_loss(
+                survivors if plans is not None else results) \
+                if plans is None or survivors else float("nan")
+            metrics = {
+                "round_time": round_virtual,
+                "wall_time": wall,
+                "clients": len(selected),
+                "comm_down_bytes": down_bytes,
+                "comm_up_bytes": up_bytes,
+                "train_loss": train_loss,
+            }
+            if plans is not None:
+                metrics.update(
+                    survivors=len(survivors),
+                    survivor_fraction=len(survivors) / max(len(selected), 1),
+                    **counts)
+            if self.cfg.server.test_every and \
+               (round_id + 1) % self.cfg.server.test_every == 0:
+                saved = server.params
+                server.params = params_r
+                try:
+                    metrics.update(server.test())
+                finally:
+                    server.params = saved
+
+            if self.cfg.tracking.enabled:
+                self.tracker.track_round(self.cfg.task_id, round_id,
+                                         **metrics)
+                for r in results:
+                    extra = ({} if r.get("_fault") is None
+                             else {"fault": r["_fault"]})
+                    self.tracker.track_client(
+                        self.cfg.task_id, round_id, r["client_id"],
+                        train_time=wall_times[r["client_id"]],
+                        simulated_time=sim_times[r["client_id"]],
+                        **r["metrics"], **extra)
+            self.history.append(metrics)
+            return metrics
+
+        return finalize
 
     # ------------------------------------------------------------------
     # checkpoint / resume (cfg.checkpoint — repro.checkpoint.store)
@@ -690,9 +845,33 @@ class Trainer:
             # budget from len(history)
             AsyncEngine(self).run()
         else:
+            # tracking.round_sync=False runs a one-deep pipeline: round R's
+            # metric fetch/finalize is deferred until after round R+1 has
+            # been dispatched, so the device never idles on a host sync.
+            # Checkpoint rounds force the pending finalize first so that
+            # resume stays bit-identical to a synchronous run.
+            defer = not self.cfg.tracking.round_sync
+            pending: Optional[Callable[[], Dict[str, float]]] = None
+            ck = self.cfg.checkpoint
+            te = self.cfg.server.test_every
             for r in range(start_round, self.cfg.server.rounds):
-                self.run_round(r)
-                self._maybe_checkpoint(r + 1)
+                fin = self._dispatch_round(r)
+                if pending is not None:
+                    pending()
+                    pending = None
+                # checkpoint and test rounds must finalize before the next
+                # dispatch: the fused program donates its input params, so
+                # round R+1 consumes the buffers round R's deferred
+                # test()/save would otherwise read
+                eager = (ck.every and (r + 1) % ck.every == 0) or \
+                        (te and (r + 1) % te == 0)
+                if defer and not eager:
+                    pending = fin
+                else:
+                    fin()
+                    self._maybe_checkpoint(r + 1)
+            if pending is not None:
+                pending()
         self.server.finalize()
         summary = {
             "task_id": self.cfg.task_id,

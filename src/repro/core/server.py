@@ -56,15 +56,25 @@ class Server:
         updates = [comp.decompress(r["update"]) for r in results]
         counts = [r["num_samples"] for r in results]
         agg = get_aggregator(self.cfg.server.aggregation)
-        self.params = agg(self.params, updates, counts,
-                          use_kernel=self.cfg.resources.aggregation_kernel,
-                          topology=self.cfg.resources.aggregation_topology,
-                          fanout=self.cfg.resources.aggregation_fanout)
+        kw = dict(use_kernel=self.cfg.resources.aggregation_kernel,
+                  topology=self.cfg.resources.aggregation_topology,
+                  fanout=self.cfg.resources.aggregation_fanout)
+        # custom registered aggregators may not take server_lr; only pass
+        # it when it actually deviates from the neutral default
+        if self.cfg.server.server_lr != 1.0:
+            kw["server_lr"] = self.cfg.server.server_lr
+        self.params = agg(self.params, updates, counts, **kw)
 
-    def apply_delta(self, delta: Any, server_lr: float = 1.0) -> None:
+    def apply_delta(self, delta: Any,
+                    server_lr: Optional[float] = None) -> None:
         """Apply a pre-aggregated update delta (the distributed batched
-        path aggregates on-mesh and bypasses :meth:`aggregation`)."""
+        path aggregates on-mesh and bypasses :meth:`aggregation`).
+
+        ``server_lr`` defaults to the configured ``server.server_lr`` so
+        every caller (staged fast path, async event loop) honors it."""
         from repro.core.aggregation import apply_delta
+        if server_lr is None:
+            server_lr = self.cfg.server.server_lr
         self.params = apply_delta(self.params, delta, server_lr)
 
     def finalize(self) -> None:

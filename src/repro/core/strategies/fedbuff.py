@@ -110,4 +110,5 @@ class FedBuffServer(Server):
             np.asarray([r["_staleness"] for r in batch], np.float32),
             power=self.cfg.resources.staleness_power,
             use_kernel=self.cfg.resources.aggregation_kernel)
-        self.params = apply_delta(self.params, delta)
+        self.params = apply_delta(self.params, delta,
+                                  self.cfg.server.server_lr)

@@ -189,7 +189,7 @@ def test_fastpath_no_update_gather_payload_from_nnz():
     trainer = _make_trainer("stc")
     selected = trainer.server.selection(trainer.fed_data.client_ids, 0)
     payload = trainer.server.distribution(selected)
-    results, aggregated = trainer._run_batched(selected, payload, 0)
+    results, aggregated, _ = trainer._run_batched(selected, payload, 0)
     assert aggregated is True
     dense = sum(int(np.prod(l.shape)) * 4 for l in
                 jax.tree_util.tree_leaves(trainer.server.params))
@@ -222,7 +222,7 @@ def test_stage_override_still_falls_back_to_gathering():
     trainer = _make_trainer("stc", client_cls=STCClient)
     selected = trainer.server.selection(trainer.fed_data.client_ids, 0)
     payload = trainer.server.distribution(selected)
-    results, aggregated = trainer._run_batched(selected, payload, 0)
+    results, aggregated, _ = trainer._run_batched(selected, payload, 0)
     assert aggregated is False
     assert all("update" in r for r in results)
     assert trainer.engine._ef_rows == {}
